@@ -1,0 +1,81 @@
+"""Shared benchmark helpers: train/eval on the synthetic tasks."""
+from __future__ import annotations
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import batches
+from repro.models import build
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.optim import OptConfig
+
+
+def train_model(model, cfg, steps=120, lr=3e-3, batch=8, seq=32, seed=0,
+                init_params=None):
+    m = model
+    if init_params is not None:
+        class Warm:
+            pass
+        Warm.cfg = model.cfg
+        Warm.init = staticmethod(lambda k: init_params)
+        Warm.loss = staticmethod(model.loss)
+        Warm.forward = staticmethod(model.forward)
+        m = Warm()
+
+    def gen():
+        i = 0
+        while True:
+            yield batches(cfg, "id", 1, batch, seq, seed=seed * 613 + i)[0]
+            i += 1
+
+    res = Trainer(m, OptConfig(lr=lr, warmup_steps=max(steps // 20, 2),
+                               total_steps=steps),
+                  TrainerConfig(total_steps=steps,
+                                log_every=max(steps // 5, 1))).train(gen())
+    return res.params, res.history
+
+
+def eval_loss(model, params, cfg, n=4, batch=8, seq=32, seed=777):
+    tot = 0.0
+    for b in batches(cfg, "id", n, batch, seq, seed=seed):
+        tot += float(model.loss(params, b)[0])
+    return tot / n
+
+
+def eval_acc(model, params, cfg, n=8, batch=32, seq=32, seed=777):
+    """Classification accuracy (CNN / pooled encoder) or next-token acc."""
+    hits = tot = 0
+    for b in batches(cfg, "id", n, batch, seq, seed=seed):
+        logits = model.forward(params, b)
+        if cfg.family == "cnn":
+            pred = np.asarray(jnp.argmax(logits, -1))
+            gold = np.asarray(b["labels"])
+        elif cfg.family == "audio" and cfg.vocab_size <= 16:
+            pred = np.asarray(jnp.argmax(jnp.mean(logits, 1), -1))
+            gold = np.asarray(b["targets"])
+        elif cfg.family == "audio":
+            pred = np.asarray(jnp.argmax(logits, -1))
+            gold = np.asarray(b["targets"])
+        else:
+            if cfg.family == "vlm":
+                logits = logits[:, cfg.vision_tokens:]
+            pred = np.asarray(jnp.argmax(logits[:, :-1], -1))
+            gold = np.asarray(b["tokens"][:, 1:])
+        hits += (pred == gold).sum()
+        tot += gold.size
+    return hits / tot
+
+
+def timed(fn, *args, repeat=1, **kw):
+    import time
+    t0 = time.time()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.time() - t0) / repeat

@@ -1,0 +1,47 @@
+"""Paper Fig. 3/9: accuracy-vs-FLOPs trade-off of grouped criteria.
+
+SPA's grouped versions of L1 / SNIP / GraSP / CroP (+ random control) at
+several pruning ratios, each fine-tuned briefly (the paper's
+train-prune-finetune and prune-train settings)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import eval_acc, train_model
+from repro.configs import get_config, reduced
+from repro.core.flops import rf_rp
+from repro.core.pruner import prune_model
+from repro.data.synthetic import batches
+from repro.models import build
+
+CRITERIA = ["l1", "snip", "grasp", "crop", "random"]
+RATIOS = [0.3, 0.6]
+
+
+def run(train_steps: int = 100, ft_steps: int = 30) -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    m = build(cfg)
+    params, _ = train_model(m, cfg, steps=train_steps)
+    acc0 = eval_acc(m, params, cfg)
+    gb = batches(cfg, "id", 1, 8, 32, seed=9)[0]
+    batch = m.dummy_batch(key, 2, 32)
+    rows.append(f"fig3_dense,0,acc={acc0:.3f} RF=1.00x")
+    for crit in CRITERIA:
+        for ratio in RATIOS:
+            res = prune_model(m, params, ratio, criterion=crit,
+                              grads_batch=gb)
+            m2 = build(res.cfg)
+            ftp, _ = train_model(m2, res.cfg, steps=ft_steps, lr=1e-3,
+                                 init_params=res.params)
+            acc = eval_acc(m2, ftp, res.cfg)
+            r = rf_rp(m, params, m2, res.params, batch)
+            rows.append(f"fig3_{crit}_r{ratio},0,"
+                        f"acc={acc:.3f} RF={r['RF']:.2f}x RP={r['RP']:.2f}x")
+            print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,88 @@
+"""The paper's three pruning regimes on one model (§3.3 "Prune Any Time"):
+
+  prune-train          — SPA-SNIP at random init, then train
+  train-prune-finetune — SPA-L1 after training, then fine-tune
+  train-prune          — OBSPA after training, NO fine-tuning (ID/OOD/DataFree)
+
+  PYTHONPATH=src python examples/prune_any_time.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.core.obspa import obspa_prune
+from repro.core.pruner import prune_model
+from repro.data.synthetic import batches
+from repro.models import build
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.optim import OptConfig
+
+RATIO, STEPS = 0.4, 100
+
+
+def train(model, cfg, steps, init_params=None, lr=3e-3, seed=0):
+    m = model
+    if init_params is not None:
+        class Warm:
+            pass
+        Warm.cfg = model.cfg
+        Warm.init = staticmethod(lambda k: init_params)
+        Warm.loss = staticmethod(model.loss)
+        Warm.forward = staticmethod(model.forward)
+        m = Warm()
+
+    def gen():
+        i = 0
+        while True:
+            yield batches(cfg, "id", 1, 8, 32, seed=seed * 131 + i)[0]
+            i += 1
+    return Trainer(m, OptConfig(lr=lr, warmup_steps=5, total_steps=steps),
+                   TrainerConfig(total_steps=steps, log_every=steps)
+                   ).train(gen()).params
+
+
+def eval_loss(model, params, cfg, n=5):
+    return sum(float(model.loss(params, b)[0])
+               for b in batches(cfg, "id", n, 8, 32, seed=555)) / n
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    model = build(cfg)
+    init = model.init(key)
+
+    print("=== prune-train (SPA-SNIP at init) ===")
+    gb = batches(cfg, "id", 1, 8, 32, seed=2)[0]
+    pt = prune_model(model, init, RATIO, criterion="snip", grads_batch=gb)
+    m_pt = build(pt.cfg)
+    p_pt = train(m_pt, pt.cfg, STEPS, init_params=pt.params)
+    print(f"loss after training the pruned-at-init model: "
+          f"{eval_loss(m_pt, p_pt, pt.cfg):.4f}")
+
+    print("\n=== train dense (shared by the next two regimes) ===")
+    dense = train(model, cfg, STEPS)
+    print(f"dense loss: {eval_loss(model, dense, cfg):.4f}")
+
+    print("\n=== train-prune-finetune (SPA-L1) ===")
+    tpf = prune_model(model, dense, RATIO, criterion="l1")
+    m_tpf = build(tpf.cfg)
+    print(f"  after prune:    {eval_loss(m_tpf, tpf.params, tpf.cfg):.4f}")
+    p_ft = train(m_tpf, tpf.cfg, STEPS // 2, init_params=tpf.params, lr=1e-3)
+    print(f"  after finetune: {eval_loss(m_tpf, p_ft, tpf.cfg):.4f}")
+
+    print("\n=== train-prune (OBSPA, no fine-tuning) ===")
+    for mode in ("id", "ood", "datafree"):
+        calib = batches(cfg, mode, 4, 8, 32, seed=5, with_targets=False)
+        ob = obspa_prune(model, dense, RATIO, calib, calib_mode=mode)
+        m_ob = build(ob.cfg)
+        print(f"  OBSPA ({mode:8s}): "
+              f"{eval_loss(m_ob, ob.params, ob.cfg):.4f}")
+
+
+if __name__ == "__main__":
+    main()

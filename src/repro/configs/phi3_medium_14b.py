@@ -1,0 +1,21 @@
+"""phi3-medium-14b [dense] — 40L d_model=5120 40H (GQA kv=10) d_ff=17920 vocab=100352.
+
+RoPE + SwiGLU + GQA.  [arXiv:2404.14219; unverified]
+"""
+from repro.configs.base import ArchConfig, register
+
+
+@register("phi3-medium-14b")
+def phi3_medium_14b() -> ArchConfig:
+    return ArchConfig(
+        name="phi3-medium-14b",
+        family="dense",
+        num_layers=40,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=10,
+        head_dim=128,
+        d_ff=17_920,
+        vocab_size=100_352,
+        rope_theta=10_000.0,
+    )

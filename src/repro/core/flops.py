@@ -1,0 +1,44 @@
+"""FLOP / parameter accounting for the paper's RF / RP metrics.
+
+RF uses the *compiled* HLO FLOP count (``compiled.cost_analysis()``) —
+real reduction in computational work, not an analytic estimate.  RP is a
+parameter count over the pytree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util as jtu
+
+
+def param_count(params) -> int:
+    return int(sum(x.size for x in jtu.tree_leaves(params)))
+
+
+def compiled_flops(fn, *args) -> float:
+    """HLO FLOPs of jit(fn)(*args) from XLA cost analysis."""
+    specs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)), args)
+    compiled = jax.jit(fn).lower(*specs).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0))
+
+
+def model_forward_flops(model, params, batch) -> float:
+    return compiled_flops(lambda p, b: model.forward(p, b), params, batch)
+
+
+def rf_rp(model_before, params_before, model_after, params_after, batch_before,
+          batch_after=None) -> dict:
+    """Paper Eq. 15/16: RF = FLOPs_before / FLOPs_after, RP likewise."""
+    batch_after = batch_after if batch_after is not None else batch_before
+    f0 = model_forward_flops(model_before, params_before, batch_before)
+    f1 = model_forward_flops(model_after, params_after, batch_after)
+    p0 = param_count(params_before)
+    p1 = param_count(params_after)
+    return {
+        "flops_before": f0, "flops_after": f1, "RF": f0 / max(f1, 1.0),
+        "params_before": p0, "params_after": p1, "RP": p0 / max(p1, 1),
+    }

@@ -1,0 +1,400 @@
+"""Optimal Brain SPA (paper §3.3) — structured train-prune, no fine-tuning.
+
+Per prunable group, the *consumer* weights (layers whose input channels the
+group removes) get:
+  1. a layer Hessian  H = X Xᵀ (+ λ·mean(diag)·I)  accumulated from
+     calibration activations captured by re-executing the computational
+     graph (no hooks — the graph IS the interpreter);
+  2. layer-OBS unit scores  Σ_cols W[:,j]² / [H⁻¹]ⱼⱼ  aggregated per
+     coupled-channel unit (Eq. 1), normalized within the group;
+  3. the SparseGPT-style column-sweep reconstruction (Eq. 13/14) over the
+     pruned columns — executed by the ``obspa_update`` Pallas kernel path.
+
+Producer weights (whose *output* channels die) are simply sliced; groups
+with no matmul consumer (e.g. whole-expert removal, which is a batch dim of
+the expert einsum, not a contraction) fall back to magnitude scoring with
+no reconstruction — this is noted in the report.
+
+Calibration regimes: ID / OOD / DataFree (uniform), per the paper; for CNNs
+the BatchNorm running stats are re-estimated from the calibration batches
+afterwards (paper App. B.3) except in the DataFree regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util as jtu
+
+from repro.core.graph import CompGraph, OpNode
+from repro.core.groups import Group
+from repro.core.importance import leaf_scores, unit_scores
+from repro.core.pruner import (PruneResult, analyze, apply_pruning,
+                               delete_positions, infer_config, prunable,
+                               restack, select_units)
+from repro.kernels.obspa_update import obspa_sweep, obspa_sweep_batched
+
+
+# ---------------------------------------------------------------------------
+# Consumer discovery
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Consumer:
+    param_path: str
+    kind: str                     # "dot" | "conv"
+    op: OpNode
+    x_uid: int
+    param_contract: tuple[int, ...]
+    param_batch: tuple[int, ...]
+    x_batch: tuple[int, ...]
+    # group axes feeding this consumer: {param_axis: set(group keys)}
+    pruned_axes: dict[int, set[str]] = dataclasses.field(default_factory=dict)
+
+
+def _real_consumers(node):
+    """Consumers, following through dtype casts."""
+    out = []
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        for op in n.consumers:
+            if op.prim in ("convert_element_type", "copy", "stop_gradient"):
+                stack.append(op.outvars[0])
+            else:
+                out.append((op, n))
+    return out
+
+
+def find_consumers(g: CompGraph, groups: list[Group]
+                   ) -> dict[tuple[str, int], list[Consumer]]:
+    """(param_path, axis) -> matmul/conv consumers contracting that axis."""
+    out: dict[tuple[str, int], list[Consumer]] = {}
+    for gr in groups:
+        for sl in gr.units[0].slices:
+            key = (sl.path, sl.axis)
+            if key in out:
+                continue
+            pnode = g.params[sl.path]
+            found = []
+            for op, used in _real_consumers(pnode):
+                if op.prim == "dot_general":
+                    (lc, rc), (lb, rb) = op.params["dimension_numbers"]
+                    for side, (c, b, xi) in (("lhs", (lc, lb, 1)),
+                                             ("rhs", (rc, rb, 0))):
+                        pv = op.invars[0 if side == "lhs" else 1]
+                        if pv is not used:
+                            continue
+                        xv = op.invars[xi]
+                        if xv is None or xv.is_param:
+                            continue
+                        if sl.axis in c:
+                            xc = (rc if side == "lhs" else lc)
+                            xb = (rb if side == "lhs" else lb)
+                            found.append(Consumer(
+                                sl.path, "dot", op, xv.uid,
+                                tuple(c), tuple(b), tuple(xb)))
+                elif op.prim == "conv_general_dilated":
+                    if op.invars[1] is not used:
+                        continue
+                    if op.params["feature_group_count"] != 1:
+                        continue
+                    dn = op.params["dimension_numbers"]
+                    if sl.axis == dn.rhs_spec[1]:       # input-feature axis
+                        xv = op.invars[0]
+                        if xv is None or xv.is_param:
+                            continue
+                        found.append(Consumer(
+                            sl.path, "conv", op, xv.uid, (), (), ()))
+            out[key] = found
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 2-D views (weight columns aligned with activation features)
+# ---------------------------------------------------------------------------
+
+def _dot_w2d(w: np.ndarray, c: Consumer) -> tuple[np.ndarray, tuple]:
+    """-> (B, R, K) with contract dims flattened last; returns inverse info."""
+    nd = w.ndim
+    free = [d for d in range(nd) if d not in c.param_contract
+            and d not in c.param_batch]
+    perm = list(c.param_batch) + free + list(c.param_contract)
+    wt = np.transpose(w, perm)
+    B = int(np.prod([w.shape[d] for d in c.param_batch])) or 1
+    R = int(np.prod([w.shape[d] for d in free])) or 1
+    K = int(np.prod([w.shape[d] for d in c.param_contract]))
+    return wt.reshape(B, R, K), (perm, wt.shape)
+
+
+def _dot_w2d_inverse(w2d: np.ndarray, inv: tuple) -> np.ndarray:
+    perm, tshape = inv
+    wt = w2d.reshape(tshape)
+    inv_perm = np.argsort(perm)
+    return np.transpose(wt, inv_perm)
+
+
+def _conv_w2d(w: np.ndarray) -> np.ndarray:
+    KH, KW, I, O = w.shape
+    return w.transpose(3, 2, 0, 1).reshape(1, O, I * KH * KW)
+
+
+def _conv_w2d_inverse(w2d: np.ndarray, shape: tuple) -> np.ndarray:
+    KH, KW, I, O = shape
+    return w2d.reshape(O, I, KH, KW).transpose(2, 3, 1, 0)
+
+
+def _flat_columns(w_shape: tuple, c: Consumer, axis: int,
+                  positions: tuple[int, ...]) -> np.ndarray:
+    """Positions on one contract axis -> flat K-column indices."""
+    if c.kind == "conv":
+        KH, KW = w_shape[0], w_shape[1]
+        blk = KH * KW
+        return np.concatenate([np.arange(p * blk, (p + 1) * blk)
+                               for p in sorted(positions)])
+    sizes = [w_shape[d] for d in c.param_contract]
+    ci = list(c.param_contract).index(axis)
+    m = np.zeros(sizes, bool)
+    sel = [slice(None)] * len(sizes)
+    sel[ci] = np.asarray(sorted(positions))
+    m[tuple(sel)] = True
+    return np.nonzero(m.reshape(-1))[0]
+
+
+def _x2d(x: np.ndarray, c: Consumer, w_shape: tuple) -> np.ndarray:
+    """Activation -> (B, N, K) aligned with _dot_w2d columns."""
+    if c.kind == "conv":
+        from jax.lax import conv_general_dilated_patches
+        KH, KW = w_shape[0], w_shape[1]
+        patches = conv_general_dilated_patches(
+            jnp.asarray(x), (KH, KW), tuple(c.op.params["window_strides"]),
+            list(map(tuple, c.op.params["padding"])),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        p = np.asarray(patches)
+        return p.reshape(1, -1, p.shape[-1])
+    nd = x.ndim
+    # x contract dims aligned pairwise with param contract dims
+    (lc, rc), (lb, rb) = c.op.params["dimension_numbers"]
+    param_is_rhs = c.param_contract == tuple(rc)
+    xc = lc if param_is_rhs else rc
+    xb = lb if param_is_rhs else rb
+    free = [d for d in range(nd) if d not in xc and d not in xb]
+    perm = list(xb) + free + list(xc)
+    xt = np.transpose(x, perm)
+    B = int(np.prod([x.shape[d] for d in xb])) or 1
+    N = int(np.prod([x.shape[d] for d in free])) or 1
+    K = int(np.prod([x.shape[d] for d in xc]))
+    return xt.reshape(B, N, K)
+
+
+# ---------------------------------------------------------------------------
+# Hessian accumulation via graph re-execution
+# ---------------------------------------------------------------------------
+
+def hkey(c: Consumer) -> tuple[int, int]:
+    """Hessian key: activation node x consumer op (two ops may share an x
+    with different im2col windows — e.g. a 3x3 conv and a 1x1 residual
+    projection reading the same feature map)."""
+    return (c.x_uid, c.op.uid)
+
+
+def accumulate_hessians(g: CompGraph, ap, calib_batches: list,
+                        consumers: dict, damping: float = 0.01
+                        ) -> dict[tuple[int, int], np.ndarray]:
+    """hkey -> inverse Hessian (B, K, K)."""
+    flat, _ = jtu.tree_flatten_with_path(ap)
+    pvals = {jtu.keystr(p, simple=True, separator="."): l for p, l in flat}
+    every = {hkey(c): c for cs in consumers.values() for c in cs}
+    shapes = {path: np.asarray(l).shape for path, l in pvals.items()}
+    cap_uids = {c.x_uid for c in every.values()}
+
+    H: dict[tuple[int, int], np.ndarray] = {}
+    count: dict[tuple[int, int], int] = {}
+    for batch in calib_batches:
+        inputs = jtu.tree_leaves(batch)
+        _, captured = g.evaluate(pvals, inputs, capture=cap_uids)
+        for k, c in every.items():
+            x = np.asarray(captured[c.x_uid], np.float32)
+            x2 = _x2d(x, c, shapes[c.param_path])
+            h = np.einsum("bnk,bnl->bkl", x2, x2, optimize=True)
+            H[k] = H.get(k, 0.0) + h
+            count[k] = count.get(k, 0) + x2.shape[1]
+
+    Hinv: dict[tuple[int, int], np.ndarray] = {}
+    for k, h in H.items():
+        h = h / max(count[k], 1)
+        K = h.shape[-1]
+        lam = damping * np.maximum(
+            np.einsum("bkk->b", h) / K, 1e-8)[:, None]
+        h = h + lam[..., None] * np.eye(K, dtype=np.float32)[None]
+        Hinv[k] = np.linalg.inv(h.astype(np.float64)).astype(np.float32)
+    return Hinv
+
+
+# ---------------------------------------------------------------------------
+# Scoring (layer-OBS, Eq. 12, grouped via Eq. 1)
+# ---------------------------------------------------------------------------
+
+def obs_unit_scores(groups: list[Group], consumers: dict, ap,
+                    Hinv: dict[int, np.ndarray], norm: str = "mean"
+                    ) -> tuple[dict[str, np.ndarray], dict[str, bool]]:
+    flat, _ = jtu.tree_flatten_with_path(ap)
+    by_path = {jtu.keystr(p, simple=True, separator="."): np.asarray(l, np.float32)
+               for p, l in flat}
+    mag_scores = None
+    out: dict[str, np.ndarray] = {}
+    has_obs: dict[str, bool] = {}
+    for gr in groups:
+        vals = np.zeros(gr.n_units, np.float64)
+        found = False
+        # per-(path,axis) precomputed per-flat-column scores for each consumer
+        col_scores: dict[tuple[str, int], list] = {}
+        for sl in gr.units[0].slices:
+            key = (sl.path, sl.axis)
+            entries = []
+            for c in consumers.get(key, ()):  # type: Consumer
+                if hkey(c) not in Hinv:
+                    continue
+                w = by_path[sl.path]
+                w2d = (_conv_w2d(w) if c.kind == "conv"
+                       else _dot_w2d(w, c)[0])
+                hin = Hinv[hkey(c)]
+                diag = np.einsum("bkk->bk", hin)
+                sc = (np.square(w2d).sum(axis=1) / np.maximum(diag, 1e-12)
+                      ).sum(axis=0)                       # (K,)
+                entries.append((c, sc, w.shape))
+            col_scores[key] = entries
+        for u, cc in enumerate(gr.units):
+            for sl in cc.slices:
+                for c, sc, wshape in col_scores[(sl.path, sl.axis)]:
+                    cols = _flat_columns(wshape, c, sl.axis, sl.positions)
+                    vals[u] += float(sc[cols].sum())
+                    found = True
+        if not found:
+            if mag_scores is None:
+                mag_scores = leaf_scores(ap, "l2")
+            vals = unit_scores([gr], mag_scores, agg="sum", norm="none")[gr.key]
+        v = np.asarray(vals, np.float64)
+        if norm == "mean":
+            v = v / max(v.mean(), 1e-12)
+        out[gr.key] = v
+        has_obs[gr.key] = found
+    return out, has_obs
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction
+# ---------------------------------------------------------------------------
+
+def reconstruct(ap, groups: list[Group], pruned: dict[str, list[int]],
+                consumers: dict, Hinv: dict[int, np.ndarray]):
+    """Apply the Eq. 13/14 sweep to every consumer, then return new params."""
+    flat, treedef = jtu.tree_flatten_with_path(ap)
+    paths = [jtu.keystr(p, simple=True, separator=".") for p, _ in flat]
+    leaves = {p: np.asarray(l) for p, l in
+              zip(paths, [l for _, l in flat])}
+
+    # consumer -> flat prune mask over K columns (union across groups/axes)
+    masks: dict[tuple[str, int], dict] = {}
+    for gr in groups:
+        for u in pruned.get(gr.key, ()):
+            for sl in gr.units[u].slices:
+                key = (sl.path, sl.axis)
+                for c in consumers.get(key, ()):
+                    if hkey(c) not in Hinv:
+                        continue
+                    ck = (sl.path, id(c.op))
+                    ent = masks.setdefault(ck, {"c": c, "cols": set()})
+                    cols = _flat_columns(leaves[sl.path].shape, c, sl.axis,
+                                         sl.positions)
+                    ent["cols"].update(int(v) for v in cols)
+
+    for (path, _), ent in masks.items():
+        c: Consumer = ent["c"]
+        w = leaves[path]
+        if c.kind == "conv":
+            w2d = _conv_w2d(w)
+        else:
+            w2d, inv = _dot_w2d(w, c)
+        B, R, K = w2d.shape
+        mask = np.zeros(K, bool)
+        mask[sorted(ent["cols"])] = True
+        hin = Hinv[hkey(c)]
+        if hin.shape[0] == 1 and B == 1:
+            new = np.asarray(obspa_sweep(w2d[0], hin[0], mask))[None]
+        else:
+            hb = hin if hin.shape[0] == B else np.repeat(hin, B, axis=0)
+            new = np.asarray(obspa_sweep_batched(
+                jnp.asarray(w2d), jnp.asarray(hb), jnp.asarray(mask)))
+        if c.kind == "conv":
+            leaves[path] = _conv_w2d_inverse(new[0], w.shape).astype(w.dtype)
+        else:
+            leaves[path] = _dot_w2d_inverse(new, inv).astype(w.dtype)
+
+    new_leaves = [jnp.asarray(leaves[p]) for p in paths]
+    return jtu.tree_unflatten(treedef, new_leaves)
+
+
+# ---------------------------------------------------------------------------
+# Top level
+# ---------------------------------------------------------------------------
+
+def obspa_prune(model, params, ratio: float, calib_batches: list,
+                align_units: int = 1, kinds: set[str] | None = None,
+                mode: str | None = None, norm: str = "mean",
+                damping: float = 0.01, do_reconstruct: bool = True,
+                recalibrate: bool = True, calib_mode: str = "id",
+                ) -> PruneResult:
+    from jax import tree_util as jtu
+    cfg = model.cfg
+    # trace at the calibration batch's shapes: the graph interpreter replays
+    # the jaxpr on the calibration data, and jaxpr eqns are shape-specialized
+    graph, groups, ap = analyze(model, params, batch=calib_batches[0])
+    targets = prunable(groups, kinds)
+    if mode is None:
+        mode = "global" if cfg.family == "cnn" else "per_group"
+
+    consumers = find_consumers(graph, targets)
+    Hinv = accumulate_hessians(graph, ap, calib_batches, consumers,
+                               damping=damping)
+    scores, has_obs = obs_unit_scores(targets, consumers, ap, Hinv, norm=norm)
+
+    shapes = {jtu.keystr(p, simple=True, separator="."): tuple(l.shape)
+              for p, l in jtu.tree_flatten_with_path(ap)[0]}
+    pruned = select_units(targets, scores, ratio, mode=mode,
+                          align_units=align_units, shapes=shapes)
+
+    if do_reconstruct:
+        ap = reconstruct(ap, targets, pruned, consumers, Hinv)
+
+    dele = delete_positions(targets, pruned)
+    new_ap = apply_pruning(ap, dele)
+    new_cfg = infer_config(cfg, new_ap)
+    new_params = restack(new_cfg, new_ap)
+
+    if recalibrate and cfg.family == "cnn" and calib_mode != "datafree":
+        new_params = recalibrate_bn(new_cfg, new_params, calib_batches)
+
+    report = {
+        "criterion": "obspa", "ratio": ratio, "mode": mode,
+        "calib_mode": calib_mode, "reconstructed": do_reconstruct,
+        "groups_with_obs": sum(has_obs.values()),
+        "groups_total": len(targets),
+        "units_pruned": {k: len(v) for k, v in pruned.items() if v},
+    }
+    return PruneResult(new_params, new_cfg, report, targets, pruned)
+
+
+def recalibrate_bn(cfg, params, calib_batches, passes: int = 2):
+    """Paper App. B.3: forward calibration data, refresh BN running stats."""
+    from repro.models.cnn import cnn_forward
+    state = params["state"]
+    for _ in range(passes):
+        for b in calib_batches:
+            _, state = cnn_forward(cfg, params["params"], state,
+                                   b["images"], train=True)
+    return {"params": params["params"], "state": state}

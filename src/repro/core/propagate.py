@@ -1,0 +1,609 @@
+"""Coupled-channel discovery via mask propagation (paper Alg. 1, App. A.3).
+
+A *mask* is ``(data_node, axis, position-set)``.  Starting from a seed mask
+on one parameter axis, masks are pushed through operator nodes using
+per-primitive rules until fixpoint; the closure is the set of coupled
+channels that must be pruned together.
+
+Rules are the JAX-primitive analogue of the paper's per-ONNX-operator
+tables (its Tab. 5 covers GeMM; ``dot_general`` here covers every
+contraction with arbitrary ``dimension_numbers``).  Where an exact per-axis
+mask does not exist (e.g. ``reshape`` splitting a head axis into
+(kv_heads, q_per_kv)), the rule emits a *conservative cover* on the
+outermost factor axis; the reverse rule then enlarges the seed to the
+block closure — exactly the GQA "prune the whole KV group" semantics.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable
+
+import numpy as np
+
+from repro.core.graph import CompGraph, DataNode, GraphError, OpNode
+
+Mask = tuple[DataNode, int, frozenset]
+RULES: dict[str, Callable] = {}
+
+
+def rule(*names):
+    def deco(fn):
+        for n in names:
+            RULES[n] = fn
+        return fn
+    return deco
+
+
+def _others(op: OpNode, role: str, idx: int):
+    """All (node, role, idx) slots adjacent to op except the given one."""
+    out = []
+    for i, v in enumerate(op.invars):
+        if v is not None and not (role == "in" and i == idx):
+            out.append((v, "in", i))
+    for i, v in enumerate(op.outvars):
+        if not (role == "out" and i == idx):
+            out.append((v, "out", i))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Elementwise
+# ---------------------------------------------------------------------------
+
+_ELEMENTWISE = (
+    "add", "sub", "mul", "div", "pow", "max", "min", "rem", "atan2",
+    "and", "or", "xor", "not", "lt", "le", "gt", "ge", "eq", "ne",
+    "neg", "exp", "exp2", "expm1", "log", "log1p", "logistic", "tanh",
+    "sin", "cos", "tan", "asin", "acos", "atan", "sinh", "cosh",
+    "rsqrt", "sqrt", "cbrt", "square", "abs", "sign", "floor", "ceil",
+    "round", "is_finite", "erf", "erfc", "erf_inv",
+    "convert_element_type", "stop_gradient", "copy", "device_put",
+    "reduce_precision", "integer_pow", "clamp", "select_n",
+    "shift_left", "shift_right_logical", "shift_right_arithmetic",
+    "nextafter", "population_count", "clz", "real", "imag",
+)
+
+
+@rule(*_ELEMENTWISE)
+def _ew(op, role, idx, axis, pos):
+    src = op.invars[idx] if role == "in" else op.outvars[idx]
+    size = src.shape[axis]
+    out = []
+    for node, _, _ in _others(op, role, idx):
+        if len(node.shape) == len(src.shape) and axis < len(node.shape) \
+                and node.shape[axis] == size:
+            out.append((node, axis, pos))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Structural ops
+# ---------------------------------------------------------------------------
+
+@rule("broadcast_in_dim")
+def _bcast(op, role, idx, axis, pos):
+    bd = op.params["broadcast_dimensions"]
+    x, y = op.invars[0], op.outvars[0]
+    out = []
+    if role == "in":
+        o = bd[axis]
+        if x.shape[axis] == y.shape[o]:
+            out.append((y, o, pos))
+    else:
+        if axis in bd:
+            a = bd.index(axis)
+            if x is not None and x.shape[a] == y.shape[axis]:
+                out.append((x, a, pos))
+    return out
+
+
+@rule("transpose")
+def _transpose(op, role, idx, axis, pos):
+    perm = op.params["permutation"]
+    x, y = op.invars[0], op.outvars[0]
+    if role == "in":
+        return [(y, perm.index(axis), pos)]
+    return [(x, perm[axis], pos)]
+
+
+@rule("squeeze")
+def _squeeze(op, role, idx, axis, pos):
+    dims = op.params["dimensions"]
+    x, y = op.invars[0], op.outvars[0]
+    if role == "in":
+        if axis in dims:
+            return []
+        o = axis - sum(1 for d in dims if d < axis)
+        return [(y, o, pos)]
+    # out -> in: count removed dims below
+    a = axis
+    for d in sorted(dims):
+        if d <= a:
+            a += 1
+    return [(x, a, pos)]
+
+
+@rule("expand_dims")
+def _expand(op, role, idx, axis, pos):
+    dims = op.params["dimensions"]
+    x, y = op.invars[0], op.outvars[0]
+    if role == "in":
+        a = axis
+        for d in sorted(dims):
+            if d <= a:
+                a += 1
+        return [(y, a, pos)]
+    if axis in dims:
+        return []
+    o = axis - sum(1 for d in dims if d < axis)
+    return [(x, o, pos)]
+
+
+def _segments(ish: tuple, osh: tuple):
+    """Greedy factorization of a reshape into (in_axes, out_axes) segments."""
+    segs = []
+    i = j = 0
+    while i < len(ish) or j < len(osh):
+        ia, oa = [i], [j]
+        pi = ish[i] if i < len(ish) else 1
+        pj = osh[j] if j < len(osh) else 1
+        i, j = i + 1, j + 1
+        while pi != pj:
+            if pi < pj:
+                pi *= ish[i]; ia.append(i); i += 1
+            else:
+                pj *= osh[j]; oa.append(j); j += 1
+        # absorb trailing 1s that belong to this segment
+        while i < len(ish) and ish[i] == 1 and (j >= len(osh) or pi == pj):
+            if j < len(osh) and osh[j] == 1:
+                break
+            ia.append(i); i += 1
+        segs.append((ia, oa, pi))
+    return segs
+
+
+_MAX_ENUM = 50_000_000
+
+
+def _reshape_map(ish, osh, axis, pos):
+    """Map mask (axis, pos) on in-shape to [(out_axis, posset)] (cover)."""
+    for ia, oa, total in _segments(ish, osh):
+        if axis in ia:
+            if total > _MAX_ENUM:
+                raise GraphError(f"reshape segment too large to analyze: {total}")
+            in_sizes = [ish[a] for a in ia]
+            li = ia.index(axis)
+            m = np.zeros(in_sizes, bool)
+            sel = [slice(None)] * len(in_sizes)
+            sel[li] = np.fromiter(sorted(pos), dtype=np.int64)
+            m[tuple(sel)] = True
+            flat = np.nonzero(m.reshape(-1))[0]
+            out_sizes = [osh[a] for a in oa]
+            emits = []
+            stride = int(np.prod(out_sizes))
+            for lo, mo in zip(oa, out_sizes):
+                stride //= mo
+                q = np.unique((flat // stride) % mo)
+                if len(q) < mo:
+                    emits.append((lo, frozenset(int(v) for v in q)))
+            if emits:
+                return [emits[0]]        # outermost non-full factor (cover)
+            # mask covered the whole segment: whole-tensor coupling
+            return [(oa[0], frozenset(range(out_sizes[0])))] if out_sizes else []
+    return []
+
+
+@rule("reshape")
+def _reshape(op, role, idx, axis, pos):
+    x, y = op.invars[0], op.outvars[0]
+    if role == "in":
+        mapped = _reshape_map(x.shape, y.shape, axis, pos)
+        return [(y, a, p) for a, p in mapped]
+    mapped = _reshape_map(y.shape, x.shape, axis, pos)
+    return [(x, a, p) for a, p in mapped]
+
+
+@rule("concatenate")
+def _concat(op, role, idx, axis, pos):
+    dim = op.params["dimension"]
+    y = op.outvars[0]
+    xs = op.invars
+    offs = np.cumsum([0] + [v.shape[dim] for v in xs])
+    out = []
+    if role == "in":
+        if axis == dim:
+            out.append((y, dim, frozenset(p + int(offs[idx]) for p in pos)))
+        else:
+            out.append((y, axis, pos))
+            for i, v in enumerate(xs):
+                if i != idx and v is not None and v.shape[axis] == xs[idx].shape[axis]:
+                    out.append((v, axis, pos))
+    else:
+        if axis == dim:
+            for i, v in enumerate(xs):
+                if v is None:
+                    continue
+                lo, hi = int(offs[i]), int(offs[i + 1])
+                sub = frozenset(p - lo for p in pos if lo <= p < hi)
+                if sub:
+                    out.append((v, dim, sub))
+        else:
+            for v in xs:
+                if v is not None and v.shape[axis] == y.shape[axis]:
+                    out.append((v, axis, pos))
+    return out
+
+
+@rule("split")
+def _split(op, role, idx, axis, pos):
+    dim = op.params["axis"]
+    sizes = [int(s) for s in op.params["sizes"]]
+    offs = np.cumsum([0] + sizes)
+    x = op.invars[0]
+    out = []
+    if role == "in":
+        if axis == dim:
+            for i, y in enumerate(op.outvars):
+                lo, hi = int(offs[i]), int(offs[i + 1])
+                sub = frozenset(p - lo for p in pos if lo <= p < hi)
+                if sub:
+                    out.append((y, dim, sub))
+        else:
+            for y in op.outvars:
+                out.append((y, axis, pos))
+    else:
+        if axis == dim:
+            lo = int(offs[idx])
+            out.append((x, dim, frozenset(p + lo for p in pos)))
+        else:
+            out.append((x, axis, pos))
+            for i, y in enumerate(op.outvars):
+                if i != idx:
+                    out.append((y, axis, pos))
+    return out
+
+
+@rule("slice")
+def _slice(op, role, idx, axis, pos):
+    starts = op.params["start_indices"]
+    strides = op.params["strides"] or (1,) * len(starts)
+    x, y = op.invars[0], op.outvars[0]
+    if role == "in":
+        sub = set()
+        for p in pos:
+            q, r = divmod(p - starts[axis], strides[axis])
+            if r == 0 and 0 <= q < y.shape[axis]:
+                sub.add(q)
+        return [(y, axis, frozenset(sub))] if sub else []
+    return [(x, axis, frozenset(p * strides[axis] + starts[axis] for p in pos))]
+
+
+@rule("pad")
+def _pad(op, role, idx, axis, pos):
+    cfgs = op.params["padding_config"]
+    lo, hi, interior = cfgs[axis]
+    x, y = op.invars[0], op.outvars[0]
+    if op.invars[idx if role == "in" else 0] is op.invars[1] and role == "in" \
+            and idx == 1:
+        return []                      # padding value scalar
+    step = interior + 1
+    if role == "in":
+        sub = frozenset(p * step + lo for p in pos
+                        if 0 <= p * step + lo < y.shape[axis])
+        return [(y, axis, sub)] if sub else []
+    sub = set()
+    for p in pos:
+        q, r = divmod(p - lo, step)
+        if r == 0 and 0 <= q < x.shape[axis]:
+            sub.add(q)
+    return [(x, axis, frozenset(sub))] if sub else []
+
+
+@rule("rev")
+def _rev(op, role, idx, axis, pos):
+    dims = op.params["dimensions"]
+    x, y = op.invars[0], op.outvars[0]
+    node = y if role == "in" else x
+    size = node.shape[axis]
+    p = frozenset(size - 1 - q for q in pos) if axis in dims else pos
+    return [(node, axis, p)]
+
+
+# ---------------------------------------------------------------------------
+# Reductions / scans / sorts
+# ---------------------------------------------------------------------------
+
+@rule("reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+      "reduce_or", "argmax", "argmin", "reduce_xor")
+def _reduce(op, role, idx, axis, pos):
+    axes = op.params["axes"]
+    x, y = op.invars[0], op.outvars[0]
+    if role == "in":
+        if axis in axes:
+            return []
+        o = axis - sum(1 for d in axes if d < axis)
+        return [(y, o, pos)]
+    a = axis
+    for d in sorted(axes):
+        if d <= a:
+            a += 1
+    return [(x, a, pos)]
+
+
+@rule("cumsum", "cumprod", "cummax", "cummin", "cumlogsumexp")
+def _cumulative(op, role, idx, axis, pos):
+    x, y = op.invars[0], op.outvars[0]
+    node = y if role == "in" else x
+    return [(node, axis, pos)]
+
+
+@rule("reduce_window_max", "reduce_window_min", "reduce_window_sum")
+def _reduce_window(op, role, idx, axis, pos):
+    win = op.params["window_dimensions"]
+    strides = op.params["window_strides"]
+    x, y = op.invars[0], op.outvars[0]
+    if win[axis] != 1 or strides[axis] != 1:
+        return []                      # pooled axis: positions mix
+    node = y if role == "in" else x
+    if node.shape[axis] == (x if role == "in" else y).shape[axis]:
+        return [(node, axis, pos)]
+    return []
+
+
+@rule("sort")
+def _sort(op, role, idx, axis, pos):
+    dim = op.params["dimension"]
+    if axis == dim:
+        return []
+    out = []
+    for node, _, _ in _others(op, role, idx):
+        if axis < len(node.shape):
+            out.append((node, axis, pos))
+    return out
+
+
+@rule("top_k")
+def _top_k(op, role, idx, axis, pos):
+    x = op.invars[0]
+    last = len(x.shape) - 1
+    if axis == last:
+        return []
+    if role == "in":
+        return [(op.outvars[0], axis, pos)]
+    return [(x, axis, pos)]
+
+
+# ---------------------------------------------------------------------------
+# Contractions
+# ---------------------------------------------------------------------------
+
+@rule("dot_general")
+def _dot(op, role, idx, axis, pos):
+    (lc, rc), (lb, rb) = op.params["dimension_numbers"]
+    lhs, rhs, y = op.invars[0], op.invars[1], op.outvars[0]
+    lhs_free = [d for d in range(len(lhs.shape)) if d not in lc and d not in lb]
+    rhs_free = [d for d in range(len(rhs.shape)) if d not in rc and d not in rb]
+    nb = len(lb)
+    out = []
+    if role == "in" and idx == 0:
+        if axis in lb:
+            i = lb.index(axis)
+            out += [(rhs, rb[i], pos), (y, i, pos)]
+        elif axis in lc:
+            out.append((rhs, rc[lc.index(axis)], pos))
+        else:
+            out.append((y, nb + lhs_free.index(axis), pos))
+    elif role == "in" and idx == 1:
+        if axis in rb:
+            i = rb.index(axis)
+            out += [(lhs, lb[i], pos), (y, i, pos)]
+        elif axis in rc:
+            out.append((lhs, lc[rc.index(axis)], pos))
+        else:
+            out.append((y, nb + len(lhs_free) + rhs_free.index(axis), pos))
+    else:
+        if axis < nb:
+            out += [(lhs, lb[axis], pos), (rhs, rb[axis], pos)]
+        elif axis < nb + len(lhs_free):
+            out.append((lhs, lhs_free[axis - nb], pos))
+        else:
+            out.append((rhs, rhs_free[axis - nb - len(lhs_free)], pos))
+    return [(n, a, p) for n, a, p in out if n is not None]
+
+
+@rule("conv_general_dilated")
+def _conv(op, role, idx, axis, pos):
+    dn = op.params["dimension_numbers"]
+    fgc = op.params["feature_group_count"]
+    lhs, rhs, y = op.invars[0], op.invars[1], op.outvars[0]
+    lB, lC = dn.lhs_spec[0], dn.lhs_spec[1]
+    rO, rI = dn.rhs_spec[0], dn.rhs_spec[1]
+    oB, oC = dn.out_spec[0], dn.out_spec[1]
+    C_in, C_out = lhs.shape[lC], rhs.shape[rO]
+    icg, ocg = C_in // fgc, C_out // fgc
+    out = []
+    if role == "in" and idx == 0:
+        if axis == lB:
+            out.append((y, oB, pos))
+        elif axis == lC:
+            if fgc == 1:
+                out.append((rhs, rI, pos))
+            else:
+                groups = {p // icg for p in pos}
+                opos = frozenset(q for g in groups
+                                 for q in range(g * ocg, (g + 1) * ocg))
+                out.append((rhs, rO, opos))
+                out.append((y, oC, opos))
+                if icg > 1:
+                    out.append((rhs, rI, frozenset(p % icg for p in pos)))
+    elif role == "in" and idx == 1:
+        if axis == rO:
+            out.append((y, oC, pos))
+            if fgc > 1:
+                groups = {p // ocg for p in pos}
+                lpos = frozenset(q for g in groups
+                                 for q in range(g * icg, (g + 1) * icg))
+                out.append((lhs, lC, lpos))
+        elif axis == rI and fgc == 1:
+            out.append((lhs, lC, pos))
+    else:
+        if axis == oB:
+            out.append((lhs, lB, pos))
+        elif axis == oC:
+            out.append((rhs, rO, pos))
+            if fgc > 1:
+                groups = {p // ocg for p in pos}
+                lpos = frozenset(q for g in groups
+                                 for q in range(g * icg, (g + 1) * icg))
+                out.append((lhs, lC, lpos))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Gather / scatter family
+# ---------------------------------------------------------------------------
+
+@rule("gather")
+def _gather(op, role, idx, axis, pos):
+    dn = op.params["dimension_numbers"]
+    sizes = op.params["slice_sizes"]
+    operand, y = op.invars[0], op.outvars[0]
+    collapsed = set(dn.collapsed_slice_dims) | set(
+        getattr(dn, "operand_batching_dims", ()) or ())
+    window = [d for d in range(len(operand.shape)) if d not in collapsed]
+    full = [d for d in window if sizes[d] == operand.shape[d]]
+    if role == "in" and idx == 0:
+        if axis in full:
+            k = window.index(axis)
+            return [(y, dn.offset_dims[k], pos)]
+        return []
+    if role == "in":
+        return []
+    if axis in dn.offset_dims:
+        k = dn.offset_dims.index(axis)
+        a = window[k]
+        if a in full:
+            return [(operand, a, pos)]
+    return []
+
+
+@rule("scatter", "scatter-add", "scatter-mul", "scatter-min", "scatter-max")
+def _scatter(op, role, idx, axis, pos):
+    dn = op.params["dimension_numbers"]
+    operand, _, updates = op.invars[0], op.invars[1], op.invars[2]
+    y = op.outvars[0]
+    inserted = set(dn.inserted_window_dims) | set(
+        getattr(dn, "operand_batching_dims", ()) or ())
+    op_window = [d for d in range(len(operand.shape)) if d not in inserted]
+    out = []
+
+    def upd_axis(a):
+        if a in op_window:
+            k = op_window.index(a)
+            u = dn.update_window_dims[k]
+            if updates.shape[u] == operand.shape[a]:
+                return u
+        return None
+
+    if role == "in" and idx == 0:
+        out.append((y, axis, pos))
+        u = upd_axis(axis)
+        if u is not None:
+            out.append((updates, u, pos))
+    elif role == "in" and idx == 2:
+        if axis in dn.update_window_dims:
+            k = dn.update_window_dims.index(axis)
+            a = op_window[k]
+            if updates.shape[axis] == operand.shape[a]:
+                out += [(operand, a, pos), (y, a, pos)]
+    elif role == "out":
+        out.append((operand, axis, pos))
+        u = upd_axis(axis)
+        if u is not None:
+            out.append((updates, u, pos))
+    return [(n, a, p) for n, a, p in out if n is not None]
+
+
+@rule("dynamic_slice")
+def _dyn_slice(op, role, idx, axis, pos):
+    operand, y = op.invars[0], op.outvars[0]
+    if role == "in" and idx > 0:
+        return []
+    node = y if role == "in" else operand
+    if operand.shape[axis] == y.shape[axis]:
+        return [(node, axis, pos)]
+    return []
+
+
+@rule("dynamic_update_slice")
+def _dus(op, role, idx, axis, pos):
+    operand, update = op.invars[0], op.invars[1]
+    y = op.outvars[0]
+    out = []
+    same = update is not None and update.shape[axis] == operand.shape[axis]
+    if role == "in" and idx == 0:
+        out.append((y, axis, pos))
+        if same:
+            out.append((update, axis, pos))
+    elif role == "in" and idx == 1:
+        if same:
+            out += [(operand, axis, pos), (y, axis, pos)]
+    elif role == "out":
+        out.append((operand, axis, pos))
+        if same:
+            out.append((update, axis, pos))
+    return [(n, a, p) for n, a, p in out if n is not None]
+
+
+_NO_PROP = ("iota", "rng_bit_generator", "random_seed", "random_bits",
+            "random_wrap", "random_unwrap", "threefry2x32", "eq_to",
+            "partition", "optimization_barrier")
+for _n in _NO_PROP:
+    RULES[_n] = lambda op, role, idx, axis, pos: []
+
+
+# ---------------------------------------------------------------------------
+# Worklist fixpoint (Alg. 1)
+# ---------------------------------------------------------------------------
+
+def propagate(g: CompGraph, seeds: list[Mask], allow_unknown: bool = False
+              ) -> dict[tuple[int, int], frozenset]:
+    """Push seed masks to fixpoint.  Returns {(node_uid, axis): positions}."""
+    acc: dict[tuple[int, int], set] = {}
+    work: deque = deque()
+    for node, axis, pos in seeds:
+        work.append((node, axis, frozenset(pos)))
+
+    while work:
+        node, axis, pos = work.popleft()
+        if len(node.shape) <= axis or node.shape[axis] <= 1:
+            continue
+        key = (node.uid, axis)
+        have = acc.setdefault(key, set())
+        delta = frozenset(p for p in pos if p not in have)
+        if not delta:
+            continue
+        have.update(delta)
+
+        sites = []
+        if node.producer is not None:
+            for i, ov in enumerate(node.producer.outvars):
+                if ov is node:
+                    sites.append((node.producer, "out", i))
+        for op in node.consumers:
+            for i, iv in enumerate(op.invars):
+                if iv is node:
+                    sites.append((op, "in", i))
+
+        for op, role, i in sites:
+            fn = RULES.get(op.prim)
+            if fn is None:
+                if allow_unknown:
+                    continue
+                raise GraphError(
+                    f"no propagation rule for primitive {op.prim!r}")
+            for tgt, a, p in fn(op, role, i, axis, delta):
+                if p:
+                    work.append((tgt, a, frozenset(p)))
+
+    return {k: frozenset(v) for k, v in acc.items()}

@@ -1,0 +1,289 @@
+"""Pruning orchestration: analyze → group → score → select → physically slice.
+
+The output of ``prune_model`` is a *new* (params, config) pair with smaller
+dims — structured pruning as a real shape change (paper Step 4), which on
+re-jit yields genuinely smaller XLA programs (RF, not just RP).
+
+Two selection modes:
+  per_group — prune the lowest-scoring fraction within every prunable group
+              (keeps layers uniform, required for scanned/stacked params)
+  global    — paper's globally-normalized ranking (Eq. 1 Norm makes groups
+              comparable); used for CNNs where layers need not stay uniform
+``align_units`` rounds keep-counts so pruned axis sizes stay multiples of
+the MXU lane width on TPU (hardware-aligned pruning, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util as jtu
+
+from repro.configs.base import ArchConfig
+from repro.core.graph import CompGraph, trace_graph
+from repro.core.groups import (Group, MOE_HINTS, build_groups, merge_by_hints)
+from repro.core.importance import (hessian_grad_product, leaf_scores,
+                                   unit_scores)
+
+
+@dataclasses.dataclass
+class PruneResult:
+    params: Any                 # pruned params, original (stacked) structure
+    cfg: ArchConfig
+    report: dict
+    groups: list[Group]
+    pruned_units: dict[str, list[int]]
+
+
+# ---------------------------------------------------------------------------
+# Analysis
+# ---------------------------------------------------------------------------
+
+def analysis_seq(cfg: ArchConfig) -> int:
+    s = 8
+    if cfg.ssm_state:
+        s = max(s, cfg.ssm_chunk)
+    if cfg.family == "vlm":
+        s = max(s, cfg.vision_tokens + 8)
+    if cfg.sliding_window:
+        s = max(s, min(cfg.sliding_window, 32))
+    return s
+
+
+def analyze(model, params, batch=None, hints: list | None = None,
+            ) -> tuple[CompGraph, list[Group], Any]:
+    """Trace + group.  Returns (graph, groups, analysis-form params)."""
+    from repro.models import transformer as tf
+    cfg = model.cfg
+    if batch is None:
+        batch = model.dummy_batch(jax.random.PRNGKey(0), 1, analysis_seq(cfg),
+                                  with_targets=False)
+    if cfg.family == "cnn":
+        ap = params
+        g = trace_graph(lambda p, b: model.forward(p, b), ap, batch)
+    else:
+        ap = tf.unstack_layers(params, cfg.num_layers)
+        g = trace_graph(lambda p, b: model.forward(p, b, unroll=True), ap, batch)
+    groups = build_groups(g)
+    if hints is None and cfg.n_experts:
+        hints = MOE_HINTS
+    if hints:
+        groups = merge_by_hints(groups, hints)
+    return g, groups, ap
+
+
+def prunable(groups: list[Group], kinds: set[str] | None = None) -> list[Group]:
+    out = [gr for gr in groups if not gr.protected]
+    if kinds is not None:
+        out = [gr for gr in out if gr.kind in kinds]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+def _unit_param_count(gr: Group, shapes: dict[str, tuple]) -> int:
+    n = 0
+    for sl in gr.units[0].slices:
+        shp = shapes[sl.path]
+        n += len(sl.positions) * int(np.prod(shp)) // shp[sl.axis]
+    return n
+
+
+def _aligned_keep(n_units: int, n_prune: int, align: int, min_keep: int) -> int:
+    keep = n_units - n_prune
+    keep = max(keep, min_keep, 1)
+    if align > 1:
+        keep = max((keep // align) * align, min(align, n_units))
+    return keep
+
+
+def _group_align(gr: Group, align_units: int, mesh_divisor: int) -> int:
+    """Units-alignment so pruned axis sizes stay mesh-divisible.
+
+    §Perf lesson C1: pruning qwen3's KV groups 8->4 left 8 query heads,
+    which no longer divided the 16-way model axis — attention fell back to
+    replication and compute REGRESSED 2.5x.  If an axis is divisible by
+    the mesh before pruning, keep it divisible after.
+    """
+    a = align_units
+    if mesh_divisor > 1:
+        import math
+        # every coupled axis that is mesh-divisible now must stay so
+        # (e.g. the q-head axis reached from a KV-group seed)
+        for sl in gr.units[0].slices:
+            u = len(sl.positions)
+            total = u * gr.n_units
+            if total % mesh_divisor == 0:
+                need = mesh_divisor // math.gcd(u, mesh_divisor)
+                a = a * need // math.gcd(a, need)
+    return a
+
+
+def select_units(groups: list[Group], scores: dict[str, np.ndarray],
+                 ratio: float, mode: str = "per_group", align_units: int = 1,
+                 min_keep: int = 1, shapes: dict | None = None,
+                 mesh_divisor: int = 0) -> dict[str, list[int]]:
+    pruned: dict[str, list[int]] = {}
+    if mode == "per_group":
+        for gr in groups:
+            s = scores[gr.key]
+            n = gr.n_units
+            a = _group_align(gr, align_units, mesh_divisor)
+            keep = _aligned_keep(n, int(round(n * ratio)), a, min_keep)
+            order = np.argsort(s, kind="stable")
+            pruned[gr.key] = sorted(int(i) for i in order[: n - keep])
+    elif mode == "global":
+        assert shapes is not None
+        entries = []          # (score, group, unit, weight)
+        weights = {gr.key: _unit_param_count(gr, shapes) for gr in groups}
+        total = sum(weights[gr.key] * gr.n_units for gr in groups)
+        for gr in groups:
+            for u, s in enumerate(scores[gr.key]):
+                entries.append((float(s), gr.key, u, weights[gr.key]))
+        entries.sort(key=lambda e: e[0])
+        kept = {gr.key: gr.n_units for gr in groups}
+        budget = ratio * total
+        removed = 0.0
+        sel: dict[str, list[int]] = {gr.key: [] for gr in groups}
+        for s, key, u, w in entries:
+            if removed >= budget:
+                break
+            if kept[key] - 1 < max(min_keep, align_units):
+                continue
+            sel[key].append(u)
+            kept[key] -= 1
+            removed += w
+        # enforce alignment by un-pruning the best of the over-pruned
+        for gr in groups:
+            keep = _aligned_keep(gr.n_units, len(sel[gr.key]), align_units,
+                                 min_keep)
+            n_prune = gr.n_units - keep
+            order = sorted(sel[gr.key],
+                           key=lambda u: float(scores[gr.key][u]))
+            pruned[gr.key] = sorted(order[:n_prune])
+    else:
+        raise ValueError(mode)
+    return pruned
+
+
+# ---------------------------------------------------------------------------
+# Execution: physical slicing
+# ---------------------------------------------------------------------------
+
+def delete_positions(groups: list[Group], pruned: dict[str, list[int]],
+                     ) -> dict[tuple[str, int], set[int]]:
+    dele: dict[tuple[str, int], set[int]] = {}
+    for gr in groups:
+        for u in pruned.get(gr.key, ()):
+            for sl in gr.units[u].slices:
+                dele.setdefault((sl.path, sl.axis), set()).update(sl.positions)
+    return dele
+
+
+def apply_pruning(analysis_params, dele: dict[tuple[str, int], set[int]]):
+    flat, treedef = jtu.tree_flatten_with_path(analysis_params)
+    paths = [jtu.keystr(p, simple=True, separator=".") for p, _ in flat]
+    leaves = [l for _, l in flat]
+    by_path: dict[str, list[tuple[int, set[int]]]] = {}
+    for (path, axis), pos in dele.items():
+        by_path.setdefault(path, []).append((axis, pos))
+    new_leaves = []
+    for path, leaf in zip(paths, leaves):
+        arr = np.asarray(leaf)
+        for axis, pos in by_path.get(path, ()):  # slice each pruned axis
+            keep = [i for i in range(arr.shape[axis]) if i not in pos]
+            arr = np.take(arr, keep, axis=axis)
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jtu.tree_unflatten(treedef, new_leaves)
+
+
+def infer_config(cfg: ArchConfig, analysis_params) -> ArchConfig:
+    """Read the pruned dims back into a new ArchConfig."""
+    if cfg.family == "cnn":
+        return cfg
+    layer0 = analysis_params["layers"][0]
+    kw: dict[str, Any] = {"name": cfg.name + "-pruned"}
+    if "attn" in layer0:
+        kw["n_heads"] = int(layer0["attn"]["wq"].shape[1])
+        kw["n_kv_heads"] = int(layer0["attn"]["wk"].shape[1])
+        kw["head_dim"] = int(layer0["attn"]["wq"].shape[2])
+        kw["v_head_dim"] = int(layer0["attn"]["wv"].shape[2])
+    if "mlp" in layer0:
+        kw["d_ff"] = int(layer0["mlp"]["w_down"].shape[0])
+    if "moe" in layer0:
+        kw["n_experts"] = int(layer0["moe"]["router"].shape[1])
+        kw["moe_d_ff"] = int(layer0["moe"]["w_down"].shape[1])
+        kw["top_k"] = min(cfg.top_k, kw["n_experts"])
+        if cfg.n_shared_experts:
+            total = int(layer0["moe"]["shared"]["w_down"].shape[0])
+            kw["shared_d_ff"] = max(total // cfg.n_shared_experts, 1)
+    if "ssm" in layer0:
+        kw["ssm_heads_override"] = int(layer0["ssm"]["w_x"].shape[1])
+        kw["ssm_head_dim"] = int(layer0["ssm"]["w_x"].shape[2])
+        kw["ssm_state"] = int(layer0["ssm"]["w_B"].shape[1])
+    return cfg.replace(**kw)
+
+
+def restack(cfg: ArchConfig, analysis_params):
+    if cfg.family == "cnn":
+        return analysis_params
+    from repro.models import transformer as tf
+    return tf.stack_layers(analysis_params)
+
+
+# ---------------------------------------------------------------------------
+# Top-level
+# ---------------------------------------------------------------------------
+
+def prune_model(model, params, ratio: float, criterion: str = "l1",
+                agg: str = "mean", norm: str = "mean",
+                mode: str | None = None, align_units: int = 1,
+                kinds: set[str] | None = None, batch=None,
+                grads_batch=None, seed: int = 0,
+                mesh_divisor: int = 0) -> PruneResult:
+    """End-to-end SPA pruning (paper §3.2 four steps).
+
+    ``align_units`` keeps MXU-aligned axis sizes; ``mesh_divisor`` (e.g.
+    the tensor-parallel degree) additionally keeps previously-divisible
+    axes divisible by the mesh — see EXPERIMENTS.md §Perf C1.
+    """
+    from repro.models import build
+    cfg = model.cfg
+    graph, groups, ap = analyze(model, params, batch=batch)
+    targets = prunable(groups, kinds)
+    if mode is None:
+        mode = "global" if cfg.family == "cnn" else "per_group"
+
+    grads = hg = None
+    if criterion in ("snip", "grasp", "crop"):
+        assert grads_batch is not None, f"{criterion} needs a grads batch"
+        loss = lambda p: model.loss(p, grads_batch, unroll=cfg.family != "cnn")[0]
+        if criterion == "snip":
+            grads = jax.grad(loss)(ap)
+        else:
+            grads, hg = hessian_grad_product(loss, ap)
+    scores_tree = leaf_scores(ap, criterion, grads=grads, hg=hg, seed=seed)
+    scores = unit_scores(targets, scores_tree, agg=agg, norm=norm)
+
+    shapes = {jtu.keystr(p, simple=True, separator="."): tuple(l.shape)
+              for p, l in jtu.tree_flatten_with_path(ap)[0]}
+    pruned = select_units(targets, scores, ratio, mode=mode,
+                          align_units=align_units, shapes=shapes,
+                          mesh_divisor=mesh_divisor)
+    dele = delete_positions(targets, pruned)
+    new_ap = apply_pruning(ap, dele)
+    new_cfg = infer_config(cfg, new_ap)
+    new_params = restack(new_cfg, new_ap)
+
+    report = {
+        "criterion": criterion, "ratio": ratio, "mode": mode,
+        "groups_total": len(groups), "groups_pruned": len(targets),
+        "units_pruned": {k: len(v) for k, v in pruned.items() if v},
+    }
+    return PruneResult(new_params, new_cfg, report, targets, pruned)

@@ -1,0 +1,160 @@
+"""Deterministic synthetic data: learnable tasks + calibration samplers.
+
+The paper's OBSPA experiments need three calibration regimes (§3.3):
+  ID       — samples from the training distribution
+  OOD      — samples from a *different* distribution of the same modality
+  DataFree — uniform noise, no data access at all
+
+LM tasks are order-2 Markov chains (learnable bigram structure; perplexity
+drops well below uniform with training).  Vision tasks are class prototypes
++ noise.  Everything is seeded and reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import AUDIO_FRAME_DIM
+
+
+@dataclasses.dataclass
+class MarkovLM:
+    vocab: int
+    seed: int = 0
+    temp: float = 3.0      # peaked transitions -> argmax acc is learnable
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        logits = rng.normal(size=(self.vocab, self.vocab)) * self.temp
+        self.T = np.exp(logits - logits.max(-1, keepdims=True))
+        self.T /= self.T.sum(-1, keepdims=True)
+
+    def sample(self, rng: np.random.Generator, batch: int, seq: int
+               ) -> np.ndarray:
+        out = np.empty((batch, seq), np.int32)
+        out[:, 0] = rng.integers(0, self.vocab, batch)
+        for t in range(1, seq):
+            p = self.T[out[:, t - 1]]
+            c = p.cumsum(-1)
+            u = rng.random((batch, 1))
+            out[:, t] = (u < c).argmax(-1)
+        return out
+
+
+@dataclasses.dataclass
+class PrototypeImages:
+    n_classes: int
+    image_size: int
+    seed: int = 0
+    noise: float = 0.6
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.protos = rng.normal(
+            size=(self.n_classes, self.image_size, self.image_size, 3)
+        ).astype(np.float32)
+
+    def sample(self, rng: np.random.Generator, batch: int):
+        labels = rng.integers(0, self.n_classes, batch)
+        imgs = self.protos[labels] + rng.normal(
+            size=(batch, self.image_size, self.image_size, 3)
+        ).astype(np.float32) * self.noise
+        return imgs.astype(np.float32), labels.astype(np.int32)
+
+
+@dataclasses.dataclass
+class FrameTask:
+    """Audio/encoder synthetic task: frames whose targets are a fixed random
+    projection of the frame content (learnable)."""
+    vocab: int
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.proj = rng.normal(size=(AUDIO_FRAME_DIM,)).astype(np.float32)
+
+    def sample(self, rng: np.random.Generator, batch: int, seq: int):
+        frames = rng.normal(size=(batch, seq, AUDIO_FRAME_DIM)).astype(np.float32)
+        score = frames @ self.proj
+        if self.vocab <= 16:
+            # sequence classification: label = bucket of the POOLED signal
+            pooled = score.mean(axis=1) * np.sqrt(seq)
+            qs = np.quantile(pooled, np.linspace(0, 1, self.vocab + 1)[1:-1])
+            return frames, np.digitize(pooled, qs).astype(np.int32)
+        # per-frame prediction (HuBERT-style)
+        qs = np.quantile(score, np.linspace(0, 1, self.vocab + 1)[1:-1])
+        targets = np.digitize(score, qs).astype(np.int32)
+        return frames, targets
+
+
+# ---------------------------------------------------------------------------
+# Batch construction in the model's input format
+# ---------------------------------------------------------------------------
+
+def make_task(cfg, mode: str = "id", seed: int = 0):
+    """A data source for (cfg, mode).  OOD = different seed/marginals."""
+    s = seed if mode == "id" else seed + 7919
+    if cfg.family == "cnn":
+        return PrototypeImages(cfg.num_classes, cfg.image_size, seed=s)
+    if cfg.family == "audio":
+        return FrameTask(cfg.vocab_size, seed=s)
+    return MarkovLM(cfg.vocab_size, seed=s)
+
+
+def batches(cfg, mode: str, n_batches: int, batch: int, seq: int,
+            seed: int = 0, with_targets: bool = True,
+            task_seed: int = 0) -> list[dict]:
+    """Calibration / training batches.  mode: id | ood | datafree.
+
+    ``task_seed`` fixes the task identity (transition matrix / prototypes);
+    ``seed`` only drives sampling — so every batch draws from the SAME
+    learnable distribution.
+    """
+    rng = np.random.default_rng(seed + {"id": 0, "ood": 1, "datafree": 2,
+                                        "eval": 3}[mode if mode != "eval"
+                                                   else "eval"])
+    task = make_task(cfg, "ood" if mode == "ood" else "id", seed=task_seed)
+    out = []
+    for _ in range(n_batches):
+        b: dict = {}
+        if cfg.family == "cnn":
+            if mode == "datafree":
+                imgs = rng.random((batch, cfg.image_size, cfg.image_size, 3),
+                                  dtype=np.float32) * 2 - 1
+                labels = rng.integers(0, cfg.num_classes, batch).astype(np.int32)
+            else:
+                imgs, labels = task.sample(rng, batch)
+            b["images"] = jnp.asarray(imgs)
+            if with_targets:
+                b["labels"] = jnp.asarray(labels)
+        elif cfg.family == "audio":
+            if mode == "datafree":
+                frames = (rng.random((batch, seq, AUDIO_FRAME_DIM),
+                                     dtype=np.float32) * 2 - 1)
+                targets = rng.integers(0, cfg.vocab_size,
+                                       (batch, seq)).astype(np.int32)
+            else:
+                frames, targets = task.sample(rng, batch, seq)
+            b["frames"] = jnp.asarray(frames)
+            if with_targets:
+                if cfg.vocab_size <= 16 and targets.ndim == 2:
+                    b["targets"] = jnp.asarray(targets[:, 0])
+                else:
+                    b["targets"] = jnp.asarray(targets)
+        else:
+            if mode == "datafree":
+                toks = rng.integers(0, cfg.vocab_size, (batch, seq)).astype(np.int32)
+            else:
+                toks = task.sample(rng, batch, seq)
+            if cfg.family == "vlm":
+                nv = cfg.vision_tokens
+                b["patches"] = jnp.asarray(rng.normal(
+                    size=(batch, nv, cfg.vision_embed_dim)).astype(np.float32))
+                b["tokens"] = jnp.asarray(toks[:, : max(seq - nv, 4)])
+            else:
+                b["tokens"] = jnp.asarray(toks)
+        out.append(b)
+    return out

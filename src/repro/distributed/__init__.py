@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingRules, constrain, use_rules, active_rules,
+    SINGLE_POD_RULES, MULTI_POD_RULES,
+)

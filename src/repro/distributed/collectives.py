@@ -1,0 +1,63 @@
+"""Collective-byte accounting from compiled HLO text (roofline §3 term).
+
+``compiled.cost_analysis()`` does not attribute collective traffic, so we
+parse the optimized HLO: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction contributes its *result* bytes
+(for reduce-scatter, the larger operand side) to the per-device collective
+volume.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum collective payload bytes per kind from optimized HLO text."""
+    per_kind: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in rhs:
+            continue                     # avoid double counting start/done
+        shapes = _SHAPE_RE.findall(rhs.split("(")[0])
+        if not shapes:
+            continue
+        bytes_ = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        per_kind[kind] += bytes_
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"total_bytes": total,
+            "per_kind": dict(per_kind),
+            "counts": dict(counts)}

@@ -1,0 +1,169 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates arrays with *logical* axis names ("batch", "seq",
+"embed", "heads", "kv_heads", "mlp", "expert", "vocab", ...).  A
+``ShardingRules`` table maps each logical name to zero or more *mesh* axes.
+``logical_to_pspec`` turns a tuple of logical names into a
+``PartitionSpec``; ``constrain`` applies it inside jit.
+
+Rules are data, not code: per-architecture or per-shape overrides are plain
+dict updates, which is what the perf hillclimb iterates on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default logical->mesh rules for the single-pod (data, model) mesh.
+SINGLE_POD_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("data",),
+    "seq": (),
+    "seq_q": (),             # context-parallel attention (e.g. heads don't
+                             # divide the model axis: phi3 40H vs 16-way TP)
+    "seq_sp": (),            # Megatron-style sequence-parallel residual
+                             # stream (shards the remat stash)
+    "kv_seq": (),            # overridden to ("data",) for long-context decode
+    "embed": (),
+    "fsdp": ("data",),       # dim-0 of big params (fully-sharded data parallel)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "expert_mlp": (),
+    "vocab": ("model",),
+    "conv_io": (),
+    "ssm_heads": ("model",),
+    "ssm_state": (),
+    "layers": (),
+    "capacity": ("data",),   # MoE dispatch-group axis (size-1 when grouped
+                             # dispatch is off -> auto-replicated)
+}
+
+# Multi-pod (pod, data, model): batch/fsdp additionally span the pod axis.
+MULTI_POD_RULES: dict[str, tuple[str, ...]] = dict(
+    SINGLE_POD_RULES,
+    batch=("pod", "data"),
+    fsdp=("pod", "data"),
+    capacity=("pod", "data"),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Immutable logical-axis -> mesh-axes mapping."""
+
+    rules: Mapping[str, tuple[str, ...]]
+    axis_sizes: Mapping[str, int] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, overrides: Mapping[str, tuple[str, ...]] | None = None
+                 ) -> "ShardingRules":
+        base = MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+        rules = dict(base)
+        if overrides:
+            rules.update(overrides)
+        # Drop references to axes the mesh does not have (e.g. unit meshes in
+        # tests) so the same model code runs everywhere.
+        rules = {
+            k: tuple(a for a in v if a in mesh.axis_names)
+            for k, v in rules.items()
+        }
+        sizes = {a: int(s) for a, s in zip(mesh.axis_names,
+                                           mesh.devices.shape)}
+        return ShardingRules(rules, sizes)
+
+    def _fit(self, axes: tuple[str, ...], dim: int | None) -> tuple[str, ...]:
+        """Drop trailing mesh axes until the dim size divides evenly.
+
+        jit in/out shardings require exact divisibility; replication on the
+        offending axis is the standard fallback (e.g. Megatron replicates KV
+        heads when tp > kv_heads, odd vocab sizes replicate over tensor).
+        """
+        if dim is None or not self.axis_sizes:
+            return axes
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= self.axis_sizes.get(a, 1)
+            if dim % prod == 0:
+                return axes
+            axes = axes[:-1]
+        return axes
+
+    def spec(self, logical_axes: Sequence[str | None],
+             shape: Sequence[int] | None = None) -> P:
+        parts = []
+        used: set[str] = set()
+        for i, name in enumerate(logical_axes):
+            if name is None:
+                parts.append(None)
+                continue
+            axes = tuple(a for a in self.rules.get(name, ()) if a not in used)
+            axes = self._fit(axes, shape[i] if shape is not None else None)
+            used.update(axes)
+            if len(axes) == 0:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+            else:
+                parts.append(axes)
+        return P(*parts)
+
+    def sharding(self, mesh: Mesh, logical_axes: Sequence[str | None]
+                 ) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(logical_axes))
+
+
+# Threaded through model code via a module-level context (set by the
+# launcher / dry-run before tracing).  ``None`` means "no constraints":
+# smoke tests on one CPU device run entirely unconstrained.
+_ACTIVE: ShardingRules | None = None
+
+
+class use_rules:
+    """Context manager installing sharding rules for model tracing."""
+
+    def __init__(self, rules: ShardingRules | None):
+        self.rules = rules
+        self._prev: ShardingRules | None = None
+
+    def __enter__(self):
+        global _ACTIVE
+        self._prev = _ACTIVE
+        _ACTIVE = self.rules
+        return self.rules
+
+    def __exit__(self, *exc):
+        global _ACTIVE
+        _ACTIVE = self._prev
+        return False
+
+
+def active_rules() -> ShardingRules | None:
+    return _ACTIVE
+
+
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Apply a logical sharding constraint if rules are active.
+
+    Divisibility-aware: axes that don't divide the corresponding dim are
+    dropped rather than erroring.  Dims with no named axis are left
+    UNCONSTRAINED (a bare ``None`` in with_sharding_constraint would force
+    replication and fight GSPMD's propagation — §Perf iteration log).
+    """
+    rules = _ACTIVE
+    if rules is None:
+        return x
+    spec = rules.spec(logical_axes, shape=x.shape)
+    parts = [P.UNCONSTRAINED if s is None else s for s in spec]
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+def param_spec(rules: ShardingRules | None, logical_axes: Sequence[str | None]) -> P:
+    if rules is None:
+        return P()
+    return rules.spec(logical_axes)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (TPU target; validated in interpret mode on CPU).
+
+  flash_attention — online-softmax attention, GQA + causal/sliding window
+  obspa_update    — OBSPA/SparseGPT structured column-sweep reconstruction
+  ssd_scan        — Mamba-2 SSD chunked scan with VMEM state carry
+
+Each package ships the kernel (pl.pallas_call + BlockSpec), a jit'd ops.py
+wrapper, and a pure-jnp ref.py oracle.
+"""

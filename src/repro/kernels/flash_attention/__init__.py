@@ -1,0 +1,2 @@
+from repro.kernels.flash_attention.ops import (  # noqa: F401
+    flash_attention, flash_attention_ref)

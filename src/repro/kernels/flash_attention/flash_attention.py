@@ -1,0 +1,113 @@
+"""Pallas TPU flash attention: online-softmax, GQA, causal/sliding window.
+
+Grid (B, H, num_q_blocks, num_k_blocks); the k-block dimension is innermost
+so the f32 accumulators (acc, running max m, running sum l) persist in VMEM
+scratch across k iterations of one (b, h, qb) tile.  K/V blocks stream
+HBM→VMEM via BlockSpec index maps; the GQA group fold happens in the index
+map (head h reads KV head h // G) so K/V are never materialized per-query-
+head.  MXU work: the (bq, d)x(d, bk) logits matmul and the (bq, bk)x(bk, dv)
+value matmul; VPU work: the online-softmax rescale chain.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int, seq_k: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qi = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kj = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kj < seq_k                                     # padded keys
+    if causal:
+        mask &= kj <= qi
+    if window:
+        mask &= kj > qi - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                # (bq, bk)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+
+    v = v_ref[0, 0].astype(jnp.float32)                   # (bk, dv)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(kb == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         scale: float | None = None, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = True):
+    """q (B, H, Sq, D), k/v (B, KH, Sk, D/DV) -> (B, H, Sq, DV)."""
+    B, H, Sq, D = q.shape
+    KH, Sk, DV = k.shape[1], k.shape[2], v.shape[3]
+    G = H // KH
+    scale = scale if scale is not None else D ** -0.5
+
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    Sqp, Skp = q.shape[2], k.shape[2]
+
+    grid = (B, H, Sqp // block_q, Skp // block_k)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_k=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, DV),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, DV),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sqp, DV), q.dtype),
+        scratch_shapes=[
+            # f32 accumulators resident in VMEM across the k grid dimension
+            pltpu.VMEM((block_q, DV), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

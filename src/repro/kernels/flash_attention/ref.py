@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention (GQA + causal/sliding-window).
+
+Shapes (kernel layout, batch-heads-major):
+  q (B, H,  Sq, D)    k (B, KH, Sk, D)    v (B, KH, Sk, DV)
+  H = KH * G (grouped queries);  output (B, H, Sq, DV).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None) -> jax.Array:
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, KH, G, Sq, D)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kj <= qi
+    if window:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.obspa_update.ops import (  # noqa: F401
+    obspa_sweep, obspa_sweep_batched, sweep_oracle)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the OBSPA reconstruction sweep (paper Eq. 13/14).
+
+Sequential semantics (SparseGPT column sweep, structured masks):
+
+    for j in pruned columns, ascending:
+        err      = W[:, j] / Hinv[j, j]
+        W[:, j:] = W[:, j:] - err ⊗ Hinv[j, j:]     # zeroes W[:, j] exactly
+
+Shapes: W (R, K) f32, Hinv (K, K) f32, prune_mask (K,) bool.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sweep_numpy(W: np.ndarray, Hinv: np.ndarray, prune_mask: np.ndarray
+                ) -> np.ndarray:
+    """Literal translation of Eq. 13/14 — ground truth for tests."""
+    W = np.array(W, dtype=np.float64)
+    Hinv = np.asarray(Hinv, dtype=np.float64)
+    for j in np.nonzero(prune_mask)[0]:
+        err = W[:, j] / Hinv[j, j]
+        W[:, j:] -= err[:, None] * Hinv[j, j:][None, :]
+    return W.astype(np.float32)
+
+
+def sweep_reference(W: jax.Array, Hinv: jax.Array, prune_mask: jax.Array
+                    ) -> jax.Array:
+    """jit-able jnp oracle (scan over columns, masked)."""
+    W = W.astype(jnp.float32)
+    Hinv = Hinv.astype(jnp.float32)
+    K = W.shape[1]
+    cols = jnp.arange(K)
+
+    def body(w, j):
+        pj = prune_mask[j]
+        hjj = Hinv[j, j]
+        err = w[:, j] / hjj
+        upd = err[:, None] * Hinv[j][None, :]
+        upd = jnp.where((cols >= j)[None, :], upd, 0.0)
+        w = jnp.where(pj, w - upd, w)
+        return w, None
+
+    W, _ = jax.lax.scan(body, W, jnp.arange(K))
+    return W

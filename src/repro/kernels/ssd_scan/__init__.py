@@ -1,0 +1,1 @@
+from repro.kernels.ssd_scan.ops import ssd_scan, ssd_scan_ref  # noqa: F401

@@ -1,0 +1,24 @@
+"""jit wrapper for the SSD scan kernel (ref on CPU, Pallas on TPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.ref import ssd_reference
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int, interpret: bool | None = None):
+    """Chunked SSD scan; same contract as models.ssm.ssd_reference minus the
+    final state (training path does not need it)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return ssd_scan_pallas(x, dt, A, B, C, chunk, interpret=interpret)
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int):
+    y, _ = ssd_reference(x, dt, A, B, C, chunk)
+    return y

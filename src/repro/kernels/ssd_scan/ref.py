@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the Mamba-2 SSD chunked scan.
+
+Re-exports the model's reference implementation so the kernel and the
+production model can never diverge from a single source of truth.
+"""
+from repro.models.ssm import ssd_reference  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.models.api import Model, build  # noqa: F401

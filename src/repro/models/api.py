@@ -1,0 +1,150 @@
+"""Model facade: one object per ArchConfig with init/loss/decode/input_specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (no allocation) for the
+multi-pod dry-run; ``dummy_batch`` returns small concrete arrays for smoke
+tests.  All functions are pure — the facade only binds the config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import cnn as cnn_mod
+from repro.models import transformer as tf
+from repro.models.layers import dtype_of
+from repro.models.transformer import AUDIO_FRAME_DIM
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ----- init -----
+    def init(self, key) -> dict:
+        if self.cfg.family == "cnn":
+            params, state = cnn_mod.cnn_init(self.cfg, key)
+            return {"params": params, "state": state}
+        return tf.init_params(self.cfg, key)
+
+    def param_axes(self) -> dict:
+        if self.cfg.family == "cnn":
+            raise ValueError("CNNs are CPU-scale; no sharding axes")
+        return tf.param_axes(self.cfg)
+
+    # ----- training -----
+    def loss(self, params, batch, unroll: bool = False):
+        if self.cfg.family == "cnn":
+            loss, (_state, metrics) = cnn_mod.cnn_loss(
+                self.cfg, params["params"], params["state"], batch,
+                train=False)
+            return loss, metrics
+        return tf.loss_fn(params, self.cfg, batch, unroll=unroll)
+
+    def forward(self, params, batch, unroll: bool = False):
+        if self.cfg.family == "cnn":
+            logits, _ = cnn_mod.cnn_forward(
+                self.cfg, params["params"], params["state"], batch["images"])
+            return logits
+        h, _ = tf.forward(params, self.cfg, batch, unroll=unroll)
+        return tf.logits_from_hidden(params, self.cfg, h)
+
+    # ----- serving -----
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        return tf.init_cache(self.cfg, batch, max_len)
+
+    def cache_axes(self, long_context: bool = False) -> dict:
+        return tf.cache_axes(self.cfg, long_context)
+
+    def decode_step(self, params, cache, tokens, pos):
+        return tf.decode_step(params, self.cfg, cache, tokens, pos)
+
+    # ----- shapes -----
+    def batch_spec(self, shape: ShapeConfig, with_targets: bool) -> dict:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        sds = jax.ShapeDtypeStruct
+        act_dt = dtype_of(cfg.dtype)
+        spec: dict[str, Any] = {}
+        if cfg.family == "audio":
+            spec["frames"] = sds((B, S, AUDIO_FRAME_DIM), act_dt)
+            if with_targets:
+                spec["targets"] = sds((B, S), jnp.int32)
+        elif cfg.family == "vlm":
+            spec["patches"] = sds((B, cfg.vision_tokens, cfg.vision_embed_dim),
+                                  act_dt)
+            spec["tokens"] = sds((B, S - cfg.vision_tokens), jnp.int32)
+        elif cfg.family == "cnn":
+            spec["images"] = sds((B, cfg.image_size, cfg.image_size, 3),
+                                 jnp.float32)
+            if with_targets:
+                spec["labels"] = sds((B,), jnp.int32)
+        else:
+            spec["tokens"] = sds((B, S), jnp.int32)
+        return spec
+
+    def cache_spec(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        dt = dtype_of(cfg.dtype)
+        L = cfg.num_layers
+        sds = jax.ShapeDtypeStruct
+        spec: dict[str, Any] = {}
+        if cfg.family != "ssm":
+            KH, hd = cfg.n_kv_heads, cfg.head_dim_
+            spec["k"] = sds((L, B, S, KH, hd), dt)
+            spec["v"] = sds((L, B, S, KH, cfg.v_head_dim_), dt)
+        if cfg.family == "ssm" or cfg.hybrid:
+            nh, hp, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+            conv_ch = nh * hp + 2 * n
+            spec["conv"] = sds((L, B, cfg.ssm_conv - 1, conv_ch), dt)
+            spec["state"] = sds((L, B, nh, hp, n), jnp.float32)
+        return spec
+
+    def decode_input_spec(self, shape: ShapeConfig) -> dict:
+        B = shape.global_batch
+        return {
+            "cache": self.cache_spec(shape),
+            "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    # ----- concrete dummy data (smoke tests) -----
+    def dummy_batch(self, key, batch: int, seq: int,
+                    with_targets: bool = True) -> dict:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        out: dict[str, Any] = {}
+        if cfg.family == "audio":
+            out["frames"] = jax.random.normal(
+                k1, (batch, seq, AUDIO_FRAME_DIM), jnp.float32
+            ).astype(dtype_of(cfg.dtype))
+            if with_targets:
+                hi = cfg.vocab_size
+                if hi <= 16:
+                    out["targets"] = jax.random.randint(k2, (batch,), 0, hi)
+                else:
+                    out["targets"] = jax.random.randint(k2, (batch, seq), 0, hi)
+        elif cfg.family == "vlm":
+            nv = cfg.vision_tokens
+            out["patches"] = jax.random.normal(
+                k1, (batch, nv, cfg.vision_embed_dim), jnp.float32
+            ).astype(dtype_of(cfg.dtype))
+            out["tokens"] = jax.random.randint(
+                k2, (batch, max(seq - nv, 4)), 0, cfg.vocab_size)
+        elif cfg.family == "cnn":
+            out["images"] = jax.random.normal(
+                k1, (batch, cfg.image_size, cfg.image_size, 3), jnp.float32)
+            out["labels"] = jax.random.randint(k2, (batch,), 0, cfg.num_classes)
+        else:
+            out["tokens"] = jax.random.randint(
+                k1, (batch, seq), 0, cfg.vocab_size)
+        return out
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,168 @@
+"""ResNet / VGG at CIFAR scale — the paper's own experiment models.
+
+BatchNorm running statistics live in a separate ``state`` pytree (they are
+recalibrated, not trained — OBSPA's BN-recalibration, paper App. B.3, needs
+to forward calibration data through eval-mode BN and refresh these).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import cross_entropy
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn_init(c):
+    return ({"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))},
+            {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))})
+
+
+def _bn(x, p, s, train: bool, eps=1e-5):
+    if train:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_s = {"mean": 0.9 * s["mean"] + 0.1 * mu,
+                 "var": 0.9 * s["var"] + 0.1 * var}
+    else:
+        mu, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y, new_s
+
+
+# ---------------------------------------------------------------------------
+# ResNet (basic blocks)
+# ---------------------------------------------------------------------------
+
+def _resnet_init(cfg: ArchConfig, key):
+    params: dict[str, Any] = {}
+    state: dict[str, Any] = {}
+    keys = iter(jax.random.split(key, 256))
+    stem = cfg.cnn_stem
+    params["stem_conv"] = _conv_init(next(keys), 3, 3, 3, stem)
+    params["stem_bn"], state["stem_bn"] = _bn_init(stem)
+    cin = stem
+    for si, (ch, blocks) in enumerate(cfg.cnn_stages):
+        for bi in range(blocks):
+            name = f"s{si}b{bi}"
+            stride = 2 if (bi == 0 and si > 0) else 1
+            blk: dict[str, Any] = {
+                "conv1": _conv_init(next(keys), 3, 3, cin, ch),
+                "conv2": _conv_init(next(keys), 3, 3, ch, ch),
+            }
+            st: dict[str, Any] = {}
+            blk["bn1"], st["bn1"] = _bn_init(ch)
+            blk["bn2"], st["bn2"] = _bn_init(ch)
+            if stride != 1 or cin != ch:
+                blk["proj"] = _conv_init(next(keys), 1, 1, cin, ch)
+                blk["proj_bn"], st["proj_bn"] = _bn_init(ch)
+            params[name], state[name] = blk, st
+            cin = ch
+    params["fc"] = jax.random.normal(
+        next(keys), (cin, cfg.num_classes), jnp.float32) * (1.0 / cin ** 0.5)
+    return params, state
+
+
+def _resnet_forward(cfg, params, state, x, train):
+    new_state: dict[str, Any] = {}
+    h = _conv(x, params["stem_conv"])
+    h, new_state["stem_bn"] = _bn(h, params["stem_bn"], state["stem_bn"], train)
+    h = jax.nn.relu(h)
+    cin = cfg.cnn_stem
+    for si, (ch, blocks) in enumerate(cfg.cnn_stages):
+        for bi in range(blocks):
+            name = f"s{si}b{bi}"
+            blk, st = params[name], state[name]
+            stride = 2 if (bi == 0 and si > 0) else 1
+            ns: dict[str, Any] = {}
+            y = _conv(h, blk["conv1"], stride)
+            y, ns["bn1"] = _bn(y, blk["bn1"], st["bn1"], train)
+            y = jax.nn.relu(y)
+            y = _conv(y, blk["conv2"])
+            y, ns["bn2"] = _bn(y, blk["bn2"], st["bn2"], train)
+            if "proj" in blk:
+                sc = _conv(h, blk["proj"], stride)
+                sc, ns["proj_bn"] = _bn(sc, blk["proj_bn"], st["proj_bn"], train)
+            else:
+                sc = h
+            h = jax.nn.relu(y + sc)
+            new_state[name] = ns
+            cin = ch
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ params["fc"]
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# VGG
+# ---------------------------------------------------------------------------
+
+def _vgg_init(cfg: ArchConfig, key):
+    params: dict[str, Any] = {}
+    state: dict[str, Any] = {}
+    keys = iter(jax.random.split(key, 256))
+    cin = 3
+    for si, (ch, convs) in enumerate(cfg.cnn_stages):
+        for ci in range(convs):
+            name = f"s{si}c{ci}"
+            params[name] = {"conv": _conv_init(next(keys), 3, 3, cin, ch)}
+            params[name]["bn"], state[name] = _bn_init(ch)
+            cin = ch
+    params["fc"] = jax.random.normal(
+        next(keys), (cin, cfg.num_classes), jnp.float32) * (1.0 / cin ** 0.5)
+    return params, state
+
+
+def _vgg_forward(cfg, params, state, x, train):
+    new_state: dict[str, Any] = {}
+    h = x
+    for si, (ch, convs) in enumerate(cfg.cnn_stages):
+        for ci in range(convs):
+            name = f"s{si}c{ci}"
+            h = _conv(h, params[name]["conv"])
+            h, new_state[name] = _bn(h, params[name]["bn"], state[name], train)
+            h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ params["fc"]
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def cnn_init(cfg: ArchConfig, key):
+    if cfg.cnn_kind == "resnet":
+        return _resnet_init(cfg, key)
+    if cfg.cnn_kind == "vgg":
+        return _vgg_init(cfg, key)
+    raise ValueError(cfg.cnn_kind)
+
+
+def cnn_forward(cfg: ArchConfig, params, state, x, train=False):
+    if cfg.cnn_kind == "resnet":
+        return _resnet_forward(cfg, params, state, x, train)
+    return _vgg_forward(cfg, params, state, x, train)
+
+
+def cnn_loss(cfg, params, state, batch, train=False):
+    logits, new_state = cnn_forward(cfg, params, state, batch["images"], train)
+    loss = cross_entropy(logits, batch["labels"])
+    return loss, (new_state, {"ce": loss})

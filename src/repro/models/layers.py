@@ -1,0 +1,119 @@
+"""Shared model layers: norms, RoPE, SwiGLU, embeddings, init helpers.
+
+Everything is functional: params are plain dict pytrees, and every layer
+constructor returns ``(init_fn, axes)`` metadata so the distributed layer
+can shard params by *logical* axis names (see distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm with f32 statistics; returns x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    normed = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (normed * scale + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(head_dim, theta))          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    sin = jnp.sin(angles)[..., None, :]                        # broadcast heads
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(kg, (d_model, d_ff), dtype),
+        "w_up": dense_init(ku, (d_model, d_ff), dtype),
+        "w_down": dense_init(kd, (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+SWIGLU_AXES = {
+    "w_gate": ("fsdp", "mlp"),
+    "w_up": ("fsdp", "mlp"),
+    "w_down": ("mlp", "fsdp"),
+}
+
+
+def swiglu(params: dict, x: jax.Array) -> jax.Array:
+    gate = x @ params["w_gate"]
+    up = x @ params["w_up"]
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    h = constrain(h, "batch", "seq", "mlp")
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Cross entropy (vocab-sharded-friendly: reductions in f32)
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean token cross-entropy.  logits (..., V) any float dtype."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

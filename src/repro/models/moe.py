@@ -1,0 +1,157 @@
+"""Mixture-of-Experts layer with sort-based token dispatch.
+
+Dispatch is MaxText-style "dropping" MoE: tokens are argsorted by assigned
+expert, ranked within their expert group, tokens beyond the capacity are
+dropped, and expert FFNs run as one batched ``(E, C, d) x (E, d, f)``
+einsum.  Gather/scatter are memory ops, so compiled HLO FLOPs stay at
+~6·N_active·D — a one-hot GShard dispatch would add O(T·E·C) fake matmul
+FLOPs and wreck the roofline (see DESIGN.md §4).
+
+Supports shared experts (qwen2-moe: ``n_shared_experts`` dense SwiGLUs that
+every token passes through) and a load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init
+
+
+def moe_init(key, cfg) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(kr, (d, E), jnp.float32),
+        "w_gate": dense_init(kg, (E, d, f), dt),
+        "w_up": dense_init(ku, (E, d, f), dt),
+        "w_down": dense_init(kd, (E, f, d), dt, fan_in=f),
+    }
+    if cfg.n_shared_experts:
+        sf = cfg.shared_d_ff
+        k1, k2, k3, k4 = jax.random.split(ks, 4)
+        p["shared"] = {
+            "w_gate": dense_init(k1, (d, cfg.n_shared_experts * sf), dt),
+            "w_up": dense_init(k2, (d, cfg.n_shared_experts * sf), dt),
+            "w_down": dense_init(k3, (cfg.n_shared_experts * sf, d), dt,
+                                 fan_in=sf),
+            "gate": dense_init(k4, (d, 1), jnp.float32),
+        }
+    return p
+
+
+MOE_AXES = {
+    "router": ("fsdp", "expert"),
+    "w_gate": ("expert", "fsdp", "expert_mlp"),
+    "w_up": ("expert", "fsdp", "expert_mlp"),
+    "w_down": ("expert", "expert_mlp", "fsdp"),
+    "shared": {
+        "w_gate": ("fsdp", "mlp"),
+        "w_up": ("fsdp", "mlp"),
+        "w_down": ("mlp", "fsdp"),
+        "gate": ("fsdp", None),
+    },
+}
+
+
+def _capacity(cfg, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(8, -(-cap // 8) * 8)   # round up to 8
+
+
+def _dispatch_group(xt, top_e, top_w, E: int, C: int):
+    """Sort-based dispatch of one token group.
+
+    xt (T, d); top_e/top_w (T, k).  Returns (buf (E, C, d), slot, st, sw,
+    keep) — all index arrays are (T*k,) and local to this group.
+    """
+    T, d = xt.shape
+    k = top_e.shape[1]
+    flat_e = top_e.reshape(T * k)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_w = top_w.reshape(T * k)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    sizes = jnp.bincount(se, length=E)
+    starts = jnp.cumsum(sizes) - sizes
+    rank = jnp.arange(T * k, dtype=jnp.int32) - starts[se]
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)                   # OOB drop
+    buf = jnp.zeros((E * C + 1, d), xt.dtype)
+    buf = buf.at[slot].set(xt[st], mode="drop")
+    return buf[:-1].reshape(E, C, d), slot, st, sw, keep
+
+
+def _combine_group(out_buf, slot, st, sw, keep, T: int):
+    """Inverse of _dispatch_group.  out_buf (E, C, d) -> (T, d) f32."""
+    E, C, d = out_buf.shape
+    flat_out = out_buf.reshape(E * C, d)
+    picked = jnp.where(keep[:, None],
+                       flat_out[jnp.minimum(slot, E * C - 1)], 0)
+    y = jnp.zeros((T, d), jnp.float32)
+    return y.at[st].add(picked.astype(jnp.float32) * sw[:, None])
+
+
+def moe_block(params: dict, cfg, x: jax.Array,
+              ) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    ``moe_dispatch_groups > 1`` splits tokens into G independent dispatch
+    groups (one per DP shard at launch): the scatter/gather becomes local
+    per shard and the only cross-device traffic is the (E->model) expert
+    all-to-all at the einsum boundary — collective-optimal (§Perf log).
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    G = max(cfg.moe_dispatch_groups, 1)
+    assert T % G == 0, (T, G)
+    xt = x.reshape(T, d)
+
+    # --- routing (f32) ---
+    logits = (xt.astype(jnp.float32) @ params["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                         # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(top_e[:, 0], E), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * mean_prob) * cfg.router_aux_weight
+
+    # --- grouped sort-based dispatch ---
+    TG = T // G
+    C = max(8, _capacity(cfg, T) // G)
+    xg = constrain(xt.reshape(G, TG, d), "batch", None, None)
+    eg = top_e.reshape(G, TG, k)
+    wg = top_w.reshape(G, TG, k)
+    buf, slot, st, sw, keep = jax.vmap(
+        lambda a, b, c: _dispatch_group(a, b, c, E, C))(xg, eg, wg)
+    # buf (G, E, C, d) -> (E, G, C, d): expert -> model, groups -> data
+    buf = constrain(buf.transpose(1, 0, 2, 3), "expert", "capacity",
+                    None, None)
+
+    # --- expert SwiGLU: (E,G,C,d)x(E,d,f) ---
+    gate = jnp.einsum("egcd,edf->egcf", buf, params["w_gate"])
+    up = jnp.einsum("egcd,edf->egcf", buf, params["w_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    out_buf = jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+    out_buf = constrain(out_buf, "expert", "capacity", None, None)
+
+    # --- combine (local per group) ---
+    yg = jax.vmap(lambda ob, sl, t, w, kp: _combine_group(ob, sl, t, w, kp, TG)
+                  )(out_buf.transpose(1, 0, 2, 3), slot, st, sw, keep)
+    y = constrain(yg, "batch", None, None).reshape(T, d)
+
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        g = xt @ sp["w_gate"]
+        u = xt @ sp["w_up"]
+        hh = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        shared_out = hh @ sp["w_down"]
+        sg = jax.nn.sigmoid(xt.astype(jnp.float32) @ sp["gate"])
+        y = y + shared_out.astype(jnp.float32) * sg
+
+    return y.astype(x.dtype).reshape(B, S, d), aux

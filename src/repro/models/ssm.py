@@ -1,0 +1,230 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan, pure JAX reference.
+
+Layout follows arXiv:2405.21060 ("minimal SSD"): per layer
+  in-projections  d -> z (gate, d_inner), x (d_inner), B (n), C (n), dt (heads)
+  causal depthwise conv1d over [x, B, C]
+  chunked SSD scan  y = SSD(dt◦x, exp(dtA), B, C) + D ◦ x
+  gated RMSNorm(y * silu(z)) -> out-projection d_inner -> d
+
+Projections are stored per-head ``(d, n_heads, head_dim)`` so SPA head
+pruning and tensor parallelism act on a real axis.  The Pallas ``ssd_scan``
+kernel (kernels/ssd_scan) implements the same chunked algorithm for TPU;
+this file is the jnp oracle used on CPU and in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init, rms_norm
+
+
+def ssm_init(key, cfg) -> dict:
+    d, n = cfg.d_model, cfg.ssm_state
+    nh, hp = cfg.ssm_n_heads, cfg.ssm_head_dim
+    di = nh * hp
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    kz, kx, kb, kc, kt, ko, kcv = jax.random.split(key, 7)
+    conv_ch = di + 2 * n
+    return {
+        "w_z": dense_init(kz, (d, nh, hp), dt),
+        "w_x": dense_init(kx, (d, nh, hp), dt),
+        "w_B": dense_init(kb, (d, n), dt),
+        "w_C": dense_init(kc, (d, n), dt),
+        "w_dt": dense_init(kt, (d, nh), dt),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": dense_init(kcv, (cfg.ssm_conv, conv_ch), dt, fan_in=cfg.ssm_conv),
+        "norm": jnp.ones((di,), dt),
+        "w_out": dense_init(ko, (nh, hp, d), dt, fan_in=di),
+    }
+
+
+SSM_AXES = {
+    "w_z": ("fsdp", "ssm_heads", "head_dim"),
+    "w_x": ("fsdp", "ssm_heads", "head_dim"),
+    "w_B": ("fsdp", "ssm_state"),
+    "w_C": ("fsdp", "ssm_state"),
+    "w_dt": ("fsdp", "ssm_heads"),
+    "dt_bias": ("ssm_heads",),
+    "A_log": ("ssm_heads",),
+    "D": ("ssm_heads",),
+    "conv_w": (None, None),
+    "norm": (None,),
+    "w_out": ("ssm_heads", "head_dim", "fsdp"),
+}
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x (B,S,Ch), w (K,Ch)."""
+    K, Ch = w.shape
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],                      # (K, 1, Ch) kernel
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=Ch)
+    return out
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., Q) -> (..., Q, Q) with out[i,j] = sum_{j<k<=i} x[k], -inf above diag."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(Q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_reference(x, dt, A, B, C, chunk: int,
+                  init_state: jax.Array | None = None):
+    """Chunked SSD scan.
+
+    x  (b, l, h, p)   — already includes the dt factor (dt ◦ x)
+    dt (b, l, h)      — positive step sizes (post-softplus)
+    A  (h,)           — negative decay rates
+    B, C (b, l, n)
+    Returns y (b, l, h, p), final_state (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    c, Q = l // chunk, chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(b, c, Q, h, p).astype(f32)
+    dtc = dt.reshape(b, c, Q, h).astype(f32)
+    Bc = B.reshape(b, c, Q, n).astype(f32)
+    Cc = C.reshape(b, c, Q, n).astype(f32)
+
+    dA = jnp.einsum("bcqh,h->bhcq", dtc, A.astype(f32))     # (b,h,c,Q)
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    L = jnp.exp(_segsum(dA))                                 # (b,h,c,Q,Q)
+    y_diag = jnp.einsum("bcqn,bckn,bhcqk,bckhp->bcqhp", Cc, Bc, L, xc)
+
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)          # (b,h,c,Q)
+    states = jnp.einsum("bcqn,bhcq,bcqhp->bchpn", Bc, decay_states, xc)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), f32)
+    chunk_sums = dA_cs[..., -1]                               # (b,h,c)
+    padded = jnp.pad(chunk_sums, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(padded))                    # (b,h,c+1,c+1)
+    states_cat = jnp.concatenate([init_state[:, None].transpose(0, 1, 2, 3, 4),
+                                  states], axis=1)            # (b,c+1,h,p,n)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states_cat)
+    states_in = new_states[:, :-1]                            # entering each chunk
+    final_state = new_states[:, -1]
+
+    state_decay = jnp.exp(dA_cs)                              # (b,h,c,Q)
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", Cc, states_in, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def _project(params, cfg, x):
+    """Shared in-projection; returns z, xin, Bv, Cv, dt (pre-conv)."""
+    z = jnp.einsum("bsd,dhp->bshp", x, params["w_z"])
+    xin = jnp.einsum("bsd,dhp->bshp", x, params["w_x"])
+    Bv = x @ params["w_B"]
+    Cv = x @ params["w_C"]
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["w_dt"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    return z, xin, Bv, Cv, dt
+
+
+def _finish(params, cfg, y, z, xin):
+    """D-skip, gated norm, out-projection."""
+    nh, hp = params["w_x"].shape[1], params["w_x"].shape[2]
+    y = y + params["D"].astype(jnp.float32)[:, None] * xin.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    flat = y.reshape(y.shape[:-2] + (nh * hp,))
+    flat = rms_norm(flat.astype(z.dtype), params["norm"], cfg.norm_eps)
+    y = flat.reshape(y.shape[:-2] + (nh, hp))
+    return jnp.einsum("...hp,hpd->...d", y, params["w_out"])
+
+
+def ssm_block(params: dict, cfg, x: jax.Array) -> jax.Array:
+    """Full-sequence SSD block.  x (B,S,d) -> (B,S,d)."""
+    B_, S, _ = x.shape
+    nh, hp = params["w_x"].shape[1], params["w_x"].shape[2]
+    n = params["w_B"].shape[1]
+    z, xin, Bv, Cv, dt = _project(params, cfg, x)
+
+    conv_in = jnp.concatenate(
+        [xin.reshape(B_, S, nh * hp), Bv, Cv], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"])
+                           .astype(jnp.float32)).astype(x.dtype)
+    xin = conv_out[..., :nh * hp].reshape(B_, S, nh, hp)
+    Bv = conv_out[..., nh * hp:nh * hp + n]
+    Cv = conv_out[..., nh * hp + n:]
+
+    xin = constrain(xin, "batch", "seq", "ssm_heads", None)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xdt = xin.astype(jnp.float32) * dt[..., None]
+    # pad sequence to a chunk multiple if needed
+    pad = (-S) % cfg.ssm_chunk
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bp = jnp.pad(Bv, ((0, 0), (0, pad), (0, 0)))
+        Cp = jnp.pad(Cv, ((0, 0), (0, pad), (0, 0)))
+    else:
+        dtp, Bp, Cp = dt, Bv, Cv
+    if cfg.use_pallas:
+        from repro.kernels.ssd_scan import ssd_scan
+        y = ssd_scan(xdt, dtp, A, Bp, Cp, cfg.ssm_chunk)
+    else:
+        y, _ = ssd_reference(xdt, dtp, A, Bp, Cp, cfg.ssm_chunk)
+    y = y[:, :S]
+    return _finish(params, cfg, y, z, xin)
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, K-1, conv_channels)
+    state: jax.Array   # (B, h, p, n) f32
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> SSMCache:
+    nh, hp, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = nh * hp + 2 * n
+    return SSMCache(
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        jnp.zeros((batch, nh, hp, n), jnp.float32))
+
+
+def ssm_decode(params: dict, cfg, x: jax.Array, cache: SSMCache
+               ) -> tuple[jax.Array, SSMCache]:
+    """Single-token recurrent step.  x (B,1,d)."""
+    B_ = x.shape[0]
+    nh, hp = params["w_x"].shape[1], params["w_x"].shape[2]
+    n = params["w_B"].shape[1]
+    z, xin, Bv, Cv, dt = _project(params, cfg, x)
+
+    conv_in = jnp.concatenate([xin.reshape(B_, 1, nh * hp), Bv, Cv], axis=-1)
+    win = jnp.concatenate([cache.conv, conv_in], axis=1)       # (B, K, ch)
+    conv_out = jnp.einsum("bkc,kc->bc", win, params["conv_w"])
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    new_conv = win[:, 1:]
+
+    xin1 = conv_out[:, :nh * hp].reshape(B_, nh, hp)
+    Bv1 = conv_out[:, nh * hp:nh * hp + n].astype(jnp.float32)
+    Cv1 = conv_out[:, nh * hp + n:].astype(jnp.float32)
+    dt1 = dt[:, 0]                                             # (B, h)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt1 * A)                                      # (B, h)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt1, Bv1, xin1.astype(jnp.float32))
+    state = cache.state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", state, Cv1)                 # (B, h, p)
+
+    out = _finish(params, cfg, y[:, None], z, xin1[:, None].astype(jnp.float32))
+    return out, SSMCache(new_conv, state)

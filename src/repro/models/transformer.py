@@ -1,0 +1,388 @@
+"""Unified transformer backbone for all six assigned LM families.
+
+One per-layer function covers:
+  dense  — GQA attention + SwiGLU
+  moe    — GQA attention + routed experts (+ shared experts)
+  vlm    — dense backbone, vision-stub patch embeddings prepended, prefix mask
+  hybrid — Hymba: parallel attention + SSD heads in the same layer, + SwiGLU
+  ssm    — Mamba-2: SSD block only (no attention, no separate FFN)
+  audio  — encoder-only (bidirectional) over stub frame embeddings
+
+Layers are scanned (``jax.lax.scan`` over stacked params) for production /
+dry-run tracing, or unrolled (python loop over per-layer pytrees) for SPA
+graph analysis — both built from the same ``layer_forward`` so they cannot
+diverge.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    cross_entropy, dense_init, dtype_of, embed_init, rms_norm, swiglu,
+    swiglu_init, SWIGLU_AXES)
+
+from repro.configs.base import AUDIO_FRAME_DIM  # noqa: F401  (stub width)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: ArchConfig) -> dict:
+    dt = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), dt)}
+    if cfg.family != "ssm":
+        p["attn"] = attn.attn_init(keys[0], cfg)
+    if cfg.family == "ssm" or cfg.hybrid:
+        p["ssm"] = ssm_mod.ssm_init(keys[1], cfg)
+    if cfg.n_experts:
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        p["moe"] = moe_mod.moe_init(keys[2], cfg)
+    elif cfg.d_ff:
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        p["mlp"] = swiglu_init(keys[3], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def layer_axes(cfg: ArchConfig) -> dict:
+    p: dict[str, Any] = {"ln1": (None,)}
+    if cfg.family != "ssm":
+        a = dict(attn.ATTN_AXES)
+        if not cfg.qk_norm:
+            a.pop("q_norm"), a.pop("k_norm")
+        p["attn"] = a
+    if cfg.family == "ssm" or cfg.hybrid:
+        p["ssm"] = dict(ssm_mod.SSM_AXES)
+    if cfg.n_experts:
+        p["ln2"] = (None,)
+        m = dict(moe_mod.MOE_AXES)
+        if not cfg.n_shared_experts:
+            m.pop("shared")
+        p["moe"] = m
+    elif cfg.d_ff:
+        p["ln2"] = (None,)
+        p["mlp"] = dict(SWIGLU_AXES)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dt = dtype_of(cfg.dtype)
+    k_emb, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    params: dict[str, Any] = {}
+    if cfg.family == "audio":
+        params["frame_proj"] = dense_init(k_emb, (AUDIO_FRAME_DIM, cfg.d_model), dt)
+    else:
+        params["tok_embed"] = embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        params["vision_proj"] = dense_init(
+            k_extra, (cfg.vision_embed_dim, cfg.d_model), dt)
+
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    per_layer = [layer_init(k, cfg) for k in layer_keys]
+    params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+    params["final_norm"] = jnp.ones((cfg.d_model,), dt)
+    if cfg.is_encoder:
+        params["head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size), dt)
+    elif not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size), dt)
+    return params
+
+
+def param_axes(cfg: ArchConfig) -> dict:
+    axes: dict[str, Any] = {}
+    if cfg.family == "audio":
+        axes["frame_proj"] = (None, "fsdp")
+    else:
+        axes["tok_embed"] = ("vocab", "fsdp")
+    if cfg.family == "vlm":
+        axes["vision_proj"] = (None, "fsdp")
+    la = layer_axes(cfg)
+    axes["layers"] = jax.tree.map(
+        lambda t: ("layers",) + tuple(t), la,
+        is_leaf=lambda t: isinstance(t, tuple))
+    axes["final_norm"] = (None,)
+    if cfg.is_encoder or not cfg.tie_embeddings:
+        axes["head"] = ("fsdp", "vocab")
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward (shared by scan + unrolled paths)
+# ---------------------------------------------------------------------------
+
+def _mask_mode(cfg: ArchConfig) -> str:
+    if cfg.is_encoder:
+        return "bidir"
+    if cfg.family == "vlm":
+        return "prefix"
+    return "causal"
+
+
+def layer_forward(lp: dict, cfg: ArchConfig, x: jax.Array,
+                  positions: jax.Array, is_global: jax.Array | None,
+                  ) -> tuple[jax.Array, jax.Array]:
+    """One layer. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    mode = _mask_mode(cfg)
+
+    if cfg.family == "ssm":
+        x = x + ssm_mod.ssm_block(lp["ssm"], cfg, h)
+        return x, aux
+
+    if cfg.hybrid:
+        # Hymba: SWA layers window, global layers attend fully.  With scanned
+        # layers the mode is data, not code: widen the window to the sequence
+        # length when is_global.
+        win = jnp.where(is_global, jnp.int32(2**30), jnp.int32(cfg.sliding_window))
+        a_out = _hybrid_attention(lp["attn"], cfg, h, positions, win)
+        s_out = ssm_mod.ssm_block(lp["ssm"], cfg, h)
+        x = x + a_out + s_out
+    else:
+        x = x + attn.attention_block(
+            lp["attn"], cfg, h, positions, mode,
+            window=cfg.sliding_window, prefix_len=cfg.vision_tokens)
+
+    if cfg.n_experts:
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        m_out, aux = moe_mod.moe_block(lp["moe"], cfg, h2)
+        x = x + m_out
+    elif cfg.d_ff:
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + swiglu(lp["mlp"], h2)
+    # "seq_sp" -> model: sequence-parallel residual stream — the scan carry
+    # (= the remat stash, L x (B,S,d)) shards over the tensor axis
+    x = constrain(x, "batch", "seq_sp", None)
+    return x, aux
+
+
+def _hybrid_attention(ap, cfg, h, positions, win):
+    """Sliding-window attention with a *dynamic* window (scalar array)."""
+    B, S, _ = h.shape
+    q, k, v = attn._qkv(ap, cfg, h, positions)
+    qp = positions[..., :, None]
+    kp = positions[..., None, :]
+    mask = (kp <= qp) & (kp > qp - win)
+    if mask.ndim == 2:
+        mask = jnp.broadcast_to(mask[None], (B,) + mask.shape)
+    o = attn._sdpa(q, k, v, mask)
+    o = o.reshape(B, S, o.shape[2] * o.shape[3], o.shape[4])
+    return jnp.einsum("bshk,hkd->bsd", o, ap["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch) -> jax.Array:
+    if cfg.family == "audio":
+        h = batch["frames"].astype(dtype_of(cfg.dtype)) @ params["frame_proj"]
+    else:
+        h = jnp.take(params["tok_embed"], batch["tokens"], axis=0)
+    if cfg.family == "vlm":
+        vis = batch["patches"].astype(h.dtype) @ params["vision_proj"]
+        h = jnp.concatenate([vis, h], axis=1)
+    return constrain(h, "batch", "seq", None)
+
+
+def _is_global_flags(cfg) -> jax.Array:
+    flags = jnp.zeros((cfg.num_layers,), bool)
+    if cfg.global_layers:
+        flags = flags.at[jnp.asarray(cfg.global_layers)].set(True)
+    return flags
+
+
+def forward(params: dict, cfg: ArchConfig, batch: dict,
+            unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Returns (hidden_states (B,S,d), total_aux_loss)."""
+    h = _embed_inputs(params, cfg, batch)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    flags = _is_global_flags(cfg)
+
+    if unroll or not cfg.use_scan:
+        aux = jnp.zeros((), jnp.float32)
+        layers = params["layers"]
+        if isinstance(layers, list):            # analysis mode: list of pytrees
+            per_layer = layers
+        else:
+            per_layer = [jax.tree.map(lambda a, i=i: a[i], layers)
+                         for i in range(cfg.num_layers)]
+        body = layer_forward
+        if cfg.remat and not unroll:
+            body = jax.checkpoint(
+                layer_forward, policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False, static_argnums=(1,))
+        for i, lp in enumerate(per_layer):
+            h, a = body(lp, cfg, h, positions, flags[i])
+            aux = aux + a
+    else:
+        body = functools.partial(_scan_body, cfg=cfg, positions=positions)
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False)
+        (h, aux), _ = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)), (params["layers"], flags))
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux
+
+
+def _scan_body(carry, xs, *, cfg, positions):
+    h, aux = carry
+    lp, flag = xs
+    h, a = layer_forward(lp, cfg, h, positions, flag)
+    return (h, aux + a), None
+
+
+def logits_from_hidden(params, cfg, h) -> jax.Array:
+    if cfg.is_encoder or not cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["head"])
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["tok_embed"])
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict,
+            unroll: bool = False) -> tuple[jax.Array, dict]:
+    h, aux = forward(params, cfg, batch, unroll=unroll)
+    if cfg.is_encoder:
+        if cfg.vocab_size <= 16:                 # sequence classification
+            pooled = jnp.mean(h, axis=1)
+            logits = pooled @ params["head"]
+            ce = cross_entropy(logits, batch["targets"])
+        else:                                    # per-frame prediction (HuBERT)
+            logits = logits_from_hidden(params, cfg, h)
+            ce = cross_entropy(logits, batch["targets"])
+    else:
+        logits = logits_from_hidden(params, cfg, h)
+        if cfg.family == "vlm":                  # loss on text positions only
+            logits = logits[:, cfg.vision_tokens:]
+        ce = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    dt = dtype_of(cfg.dtype)
+    L = cfg.num_layers
+    cache: dict[str, Any] = {}
+    if cfg.family != "ssm":
+        kv = attn.init_layer_cache(cfg, batch, max_len, dt)
+        cache["k"] = jnp.broadcast_to(kv.k[None], (L,) + kv.k.shape)
+        cache["v"] = jnp.broadcast_to(kv.v[None], (L,) + kv.v.shape)
+    if cfg.family == "ssm" or cfg.hybrid:
+        sc = ssm_mod.init_ssm_cache(cfg, batch, dt)
+        cache["conv"] = jnp.broadcast_to(sc.conv[None], (L,) + sc.conv.shape)
+        cache["state"] = jnp.broadcast_to(sc.state[None], (L,) + sc.state.shape)
+    return jax.tree.map(jnp.array, cache)        # materialize broadcasts
+
+
+def cache_axes(cfg: ArchConfig, long_context: bool = False) -> dict:
+    """Logical axes of the cache pytree.  "kv_seq" defaults to replicated;
+    rules override it for long-context (data) or kv-replicated (model)."""
+    del long_context
+    axes: dict[str, Any] = {}
+    seq_ax = "kv_seq"
+    if cfg.family != "ssm":
+        axes["k"] = ("layers", "batch", seq_ax, "kv_heads", None)
+        axes["v"] = ("layers", "batch", seq_ax, "kv_heads", None)
+    if cfg.family == "ssm" or cfg.hybrid:
+        axes["conv"] = ("layers", "batch", None, None)
+        axes["state"] = ("layers", "batch", "ssm_heads", None, None)
+    return axes
+
+
+def decode_step(params: dict, cfg: ArchConfig, cache: dict,
+                tokens: jax.Array, pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One decode step.  tokens (B,) int32, pos scalar int32.
+
+    Returns (logits (B, V), updated cache).
+    """
+    x = jnp.take(params["tok_embed"], tokens[:, None], axis=0)  # (B,1,d)
+    flags = _is_global_flags(cfg)
+
+    def body(carry, xs):
+        h = carry
+        lp, lc, flag = xs
+        out_cache = {}
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        if cfg.family == "ssm":
+            delta, new_sc = ssm_mod.ssm_decode(
+                lp["ssm"], cfg, hn, ssm_mod.SSMCache(lc["conv"], lc["state"]))
+            h = h + delta
+            out_cache["conv"], out_cache["state"] = new_sc.conv, new_sc.state
+        else:
+            kvc = attn.KVCache(lc["k"], lc["v"])
+            if cfg.hybrid:
+                win = jnp.where(flag, jnp.int32(2**30),
+                                jnp.int32(cfg.sliding_window))
+                a_out, new_kv = attn.attention_decode(
+                    lp["attn"], cfg, hn, pos, kvc, "sliding", window=win)
+                s_out, new_sc = ssm_mod.ssm_decode(
+                    lp["ssm"], cfg, hn, ssm_mod.SSMCache(lc["conv"], lc["state"]))
+                h = h + a_out + s_out
+                out_cache["conv"], out_cache["state"] = new_sc.conv, new_sc.state
+            else:
+                a_out, new_kv = attn.attention_decode(
+                    lp["attn"], cfg, hn, pos, kvc, "causal")
+                h = h + a_out
+            out_cache["k"], out_cache["v"] = new_kv.k, new_kv.v
+            if cfg.n_experts:
+                h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+                m_out, _ = moe_mod.moe_block(lp["moe"], cfg, h2)
+                h = h + m_out
+            elif cfg.d_ff:
+                h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+                h = h + swiglu(lp["mlp"], h2)
+        return h, out_cache
+
+    if cfg.use_scan:
+        (h), new_cache = jax.lax.scan(
+            body, x, (params["layers"], cache, flags))
+    else:
+        h = x
+        per_layer_caches = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+            lc = jax.tree.map(lambda a, i=i: a[i], cache)
+            h, oc = body(h, (lp, lc, flags[i]))
+            per_layer_caches.append(oc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *per_layer_caches)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, h)[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stack/unstack helpers for the pruning engine's unrolled analysis mode
+# ---------------------------------------------------------------------------
+
+def unstack_layers(params: dict, num_layers: int) -> dict:
+    out = dict(params)
+    out["layers"] = [jax.tree.map(lambda a, i=i: a[i], params["layers"])
+                     for i in range(num_layers)]
+    return out
+
+
+def stack_layers(params: dict) -> dict:
+    out = dict(params)
+    out["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *params["layers"])
+    return out

@@ -1,0 +1,52 @@
+"""int8 gradient compression with error feedback (cross-pod DP sync).
+
+At multi-pod scale the top-level gradient all-reduce crosses the slow
+inter-pod links; int8 quantization halves-to-quarters the payload.  Error
+feedback (Seide et al. / 1-bit SGD lineage) accumulates the quantization
+residual locally and re-injects it next step, which keeps SGD/Adam
+convergence essentially intact.
+
+Math note: quantize -> (all-reduce) -> dequantize with per-leaf scales is
+applied here as quantize->dequantize around the optimizer; on hardware the
+reduce happens between the two (the residual algebra is identical because
+the EF residual is taken against the *local* quantized value).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+
+def compress_grads(grads, error_state):
+    """Returns (dequantized grads, new error state, bytes saved fraction)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        return deq, gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_g, new_e
+
+
+def compression_ratio(params) -> float:
+    """Payload bytes int8 vs f32 (scales amortize to ~0)."""
+    return 0.25

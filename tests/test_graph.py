@@ -1,0 +1,114 @@
+"""Unit tests for the computational graph + mask propagation rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import trace_graph, GraphError
+from repro.core.propagate import propagate, _segments, _reshape_map
+from repro.core.groups import build_groups
+
+
+def closure_of(fn, params, x, path, axis, pos={0}):
+    g = trace_graph(fn, params, x)
+    node = g.params[path]
+    cl = propagate(g, [(node, axis, frozenset(pos))])
+    uid2p = {n.uid: p for p, n in g.params.items()}
+    return {(uid2p[u], a): sorted(p) for (u, a), p in cl.items() if u in uid2p}
+
+
+def test_mlp_hidden_coupling():
+    params = {"w1": jnp.ones((8, 16)), "w2": jnp.ones((16, 4))}
+    fn = lambda p, x: jax.nn.relu(x @ p["w1"]) @ p["w2"]
+    cl = closure_of(fn, params, jnp.ones((2, 8)), "w1", 1, {3})
+    assert cl == {("w1", 1): [3], ("w2", 0): [3]}
+
+
+def test_residual_coupling():
+    params = {"w1": jnp.ones((8, 8)), "w2": jnp.ones((8, 8))}
+    fn = lambda p, x: x + (x @ p["w1"]) @ p["w2"]
+    cl = closure_of(fn, params, jnp.ones((2, 8)), "w2", 1, {5})
+    # residual add couples w2's output column with w1's input row (via x)
+    assert ("w1", 0) in cl and cl[("w2", 1)] == [5]
+
+
+def test_concat_split_offsets():
+    params = {"wa": jnp.ones((4, 6)), "wb": jnp.ones((4, 10)),
+              "wc": jnp.ones((16, 3))}
+
+    def fn(p, x):
+        h = jnp.concatenate([x @ p["wa"], x @ p["wb"]], axis=-1)
+        return h @ p["wc"]
+
+    cl = closure_of(fn, params, jnp.ones((2, 4)), "wb", 1, {2})
+    assert cl[("wc", 0)] == [8]          # offset by wa's 6 columns
+    cl2 = closure_of(fn, params, jnp.ones((2, 4)), "wc", 0, {3})
+    assert cl2[("wa", 1)] == [3] and ("wb", 1) not in cl2
+
+
+def test_gqa_reshape_cover():
+    """Splitting heads H -> (KH, G) must close over the whole KV group."""
+    B, S, d, KH, G, hd = 1, 4, 16, 2, 3, 4
+    H = KH * G
+    params = {"wq": jnp.ones((d, H, hd)), "wk": jnp.ones((d, KH, hd))}
+
+    def fn(p, x):
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        qg = q.reshape(B, S, KH, G, hd)
+        return jnp.einsum("bsigk,btik->bsigt", qg, k)
+
+    cl = closure_of(fn, params, jnp.ones((B, S, d)), "wq", 1, {0})
+    assert cl[("wq", 1)] == [0, 1, 2]      # whole group of G q-heads
+    assert cl[("wk", 1)] == [0]
+
+
+def test_grouped_conv_coupling():
+    x = jnp.ones((1, 8, 8, 8))
+    params = {"w": jnp.ones((3, 3, 2, 12))}   # fgc=4: icg=2, ocg=3
+
+    def fn(p, xx):
+        return jax.lax.conv_general_dilated(
+            xx, p["w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=4)
+
+    g = trace_graph(fn, params, x)
+    cl = propagate(g, [(g.params["w"], 3, frozenset({4}))])  # out channel 4
+    uid2p = {n.uid: p for p, n in g.params.items()}
+    got = {(uid2p[u], a): sorted(p) for (u, a), p in cl.items() if u in uid2p}
+    assert got[("w", 3)] == [3, 4, 5]       # whole output group coupled
+
+
+def test_reshape_segments():
+    assert _segments((4, 6), (24,))[0] == ([0, 1], [0], 24)
+    assert _segments((2, 3, 4), (6, 4))[0] == ([0, 1], [0], 6)
+    m = _reshape_map((12,), (3, 4), 0, frozenset({5}))
+    assert m == [(0, frozenset({1}))]       # conservative outer cover
+    m2 = _reshape_map((3, 4), (12,), 0, frozenset({1}))
+    assert m2 == [(0, frozenset({4, 5, 6, 7}))]
+
+
+def test_scan_rejected():
+    params = {"w": jnp.ones((4, 4))}
+
+    def fn(p, x):
+        def body(c, _):
+            return c @ p["w"], None
+        out, _ = jax.lax.scan(body, x, None, length=3)
+        return out
+
+    with pytest.raises(GraphError):
+        trace_graph(fn, params, jnp.ones((2, 4)))
+
+
+def test_graph_evaluate_matches_fn(key):
+    params = {"w1": jax.random.normal(key, (8, 16)),
+              "w2": jax.random.normal(key, (16, 4))}
+    x = jax.random.normal(key, (3, 8))
+    fn = lambda p, xx: jax.nn.silu(xx @ p["w1"]) @ p["w2"]
+    g = trace_graph(fn, params, x)
+    outs, _ = g.evaluate(
+        {"w1": params["w1"], "w2": params["w2"]}, [x])
+    np.testing.assert_allclose(np.asarray(outs[0]),
+                               np.asarray(fn(params, x)), rtol=1e-6)

@@ -1,0 +1,81 @@
+"""OBSPA system tests: reconstruction wins, calibration modes, BN recal."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.obspa import obspa_prune
+from repro.core.pruner import prune_model
+from repro.data.synthetic import batches
+from repro.models import build
+
+
+def _logit_mse(m, p, m2, p2, evalb):
+    a = np.asarray(m.forward(p, evalb), np.float32)
+    b = np.asarray(m2.forward(p2, evalb), np.float32)
+    return float(np.mean((a - b) ** 2))
+
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "resnet18-cifar"])
+def test_reconstruction_beats_naive(name, key):
+    cfg = reduced(get_config(name))
+    m = build(cfg)
+    params = m.init(key)
+    calib = batches(cfg, "id", 4, 8, 16, seed=1, with_targets=False)
+    evalb = batches(cfg, "id", 1, 8, 16, seed=99, with_targets=False)[0]
+
+    naive = prune_model(m, params, 0.5, criterion="l1")
+    ob = obspa_prune(m, params, 0.5, calib, recalibrate=False)
+    e_naive = _logit_mse(m, params, build(naive.cfg), naive.params, evalb)
+    e_ob = _logit_mse(m, params, build(ob.cfg), ob.params, evalb)
+    assert e_ob < e_naive, (name, e_ob, e_naive)
+
+
+@pytest.mark.parametrize("mode", ["id", "ood", "datafree"])
+def test_calibration_modes(mode, key):
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    m = build(cfg)
+    params = m.init(key)
+    calib = batches(cfg, mode, 3, 4, 16, seed=1, with_targets=False)
+    res = obspa_prune(m, params, 0.5, calib, calib_mode=mode,
+                      recalibrate=False)
+    m2 = build(res.cfg)
+    evalb = batches(cfg, "id", 1, 4, 16, seed=7, with_targets=False)[0]
+    assert np.isfinite(np.asarray(m2.forward(res.params, evalb))).all()
+
+
+def test_bn_recalibration_changes_stats(key):
+    cfg = reduced(get_config("resnet18-cifar"))
+    m = build(cfg)
+    params = m.init(key)
+    calib = batches(cfg, "id", 3, 8, 0, seed=1, with_targets=False)
+    res_no = obspa_prune(m, params, 0.4, calib, recalibrate=False)
+    res_yes = obspa_prune(m, params, 0.4, calib, recalibrate=True,
+                          calib_mode="id")
+    s_no = np.concatenate([np.ravel(x) for x in
+                           jax.tree.leaves(res_no.params["state"])])
+    s_yes = np.concatenate([np.ravel(x) for x in
+                            jax.tree.leaves(res_yes.params["state"])])
+    assert not np.allclose(s_no, s_yes)
+
+
+def test_reconstruction_exact_single_layer(key):
+    """For one linear layer, pruning an input channel with OBSPA must match
+    the closed-form least-squares compensation."""
+    rng = np.random.default_rng(0)
+    K, R, N = 16, 8, 512
+    W = rng.normal(size=(K, R)).astype(np.float32)       # x @ W
+    X = rng.normal(size=(N, K)).astype(np.float32)
+    H = X.T @ X / N
+    lam = 0.01 * np.trace(H) / K
+    Hinv = np.linalg.inv(H + lam * np.eye(K, dtype=np.float32))
+    from repro.kernels.obspa_update import sweep_oracle
+    mask = np.zeros(K, bool)
+    mask[2] = True
+    Wt = sweep_oracle(W.T, Hinv, mask)                    # (R, K) view
+    # paper Eq. 13/14 single-column closed form
+    err = W.T[:, 2] / Hinv[2, 2]
+    expect = W.T.copy()
+    expect[:, 2:] -= err[:, None] * Hinv[2, 2:][None]
+    np.testing.assert_allclose(Wt, expect, rtol=1e-5, atol=1e-5)

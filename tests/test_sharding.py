@@ -1,0 +1,95 @@
+"""Sharding rules + dry-run machinery tests (small meshes in-process; the
+full 512-device sweep runs in a subprocess under --runslow)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.distributed.sharding import ShardingRules
+from repro.distributed.collectives import collective_bytes
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+
+    class _Dev:
+        shape = (4, 2)
+        size = 8
+    devices = _Dev()
+
+
+def test_rules_divisibility_fit():
+    rules = ShardingRules.for_mesh(FakeMesh())
+    # 8 divides nothing on model=2? heads axis of size 7 -> replicated
+    spec = rules.spec(("batch", "heads"), shape=(16, 7))
+    assert spec[1] is None
+    spec2 = rules.spec(("batch", "heads"), shape=(16, 8))
+    assert spec2 == ("data", "model") or (spec2[0] == "data"
+                                          and spec2[1] == "model")
+
+
+def test_rules_duplicate_axis_dropped():
+    rules = ShardingRules.for_mesh(FakeMesh())
+    # "mlp" and "heads" both map to model: second use must drop
+    spec = rules.spec(("heads", "mlp"), shape=(8, 8))
+    assert [s for s in spec if s == "model"] == ["model"]
+
+
+def test_collective_parser():
+    hlo = """
+  %ag = bf16[16,2048] all-gather(bf16[16,128] %x), dimensions={1}
+  %ar = f32[1024] all-reduce(f32[1024] %y), to_apply=%sum
+  %rs = f32[64] reduce-scatter(f32[1024] %z), dimensions={0}
+  %cp = bf16[8,8] collective-permute(bf16[8,8] %w)
+  %other = f32[4] add(f32[4] %a, f32[4] %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["counts"] == {"all-gather": 1, "all-reduce": 1,
+                             "reduce-scatter": 1, "collective-permute": 1}
+    assert out["per_kind"]["all-gather"] == 16 * 2048 * 2
+    assert out["per_kind"]["all-reduce"] == 1024 * 4
+
+
+def test_cell_support_matrix():
+    from repro.configs import cell_supported, ASSIGNED_ARCHS
+    rows = {(a, s): cell_supported(get_config(a), SHAPES[s])[0]
+            for a in ASSIGNED_ARCHS for s in SHAPES}
+    assert sum(rows.values()) == 31          # documented runnable cells
+    assert not rows[("qwen3-1.7b", "long_500k")]
+    assert rows[("mamba2-1.3b", "long_500k")]
+    assert rows[("hymba-1.5b", "long_500k")]
+    assert not rows[("hubert-xlarge", "decode_32k")]
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_small():
+    """Real lower+compile at 512 fake devices for two representative cells."""
+    env = dict(os.environ)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    for arch, shape in [("tinyllama-1.1b", "train_4k"),
+                        ("mamba2-1.3b", "decode_32k")]:
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--multi-pod", "both"],
+            capture_output=True, text=True, env=env, timeout=900)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "0 errors" in r.stdout
+
+
+def test_dryrun_results_complete():
+    """The committed baseline sweep must cover all 80 cells with 0 errors."""
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun_baseline.json")
+    if not os.path.exists(path):
+        pytest.skip("baseline sweep not generated yet")
+    rows = json.load(open(path))
+    assert len(rows) == 80
+    by = {}
+    for r in rows:
+        by.setdefault(r["status"], []).append(r)
+    assert "error" not in by, by.get("error")
+    assert len(by["ok"]) == 62 and len(by["skipped"]) == 18

@@ -1,0 +1,142 @@
+"""End-to-end behaviour tests mirroring the paper's claims at CPU scale.
+
+These are the system-level acceptance tests: train -> prune -> (finetune)
+workflows on synthetic data, checking that the paper's qualitative results
+hold (grouped criteria work on every family; OBSPA needs no fine-tuning;
+pruning gives real compiled-FLOP reductions)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.flops import rf_rp
+from repro.core.obspa import obspa_prune
+from repro.core.pruner import prune_model
+from repro.data.synthetic import batches
+from repro.models import build
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.optim import OptConfig
+
+
+def _train(m, cfg, steps=60, lr=3e-3, seed=0, init_params=None):
+    class Warm:
+        pass
+    model = m
+    if init_params is not None:
+        Warm.cfg = m.cfg
+        Warm.init = staticmethod(lambda k: init_params)
+        Warm.loss = staticmethod(m.loss)
+        Warm.forward = staticmethod(m.forward)
+        model = Warm()
+
+    def gen():
+        i = 0
+        while True:
+            yield batches(cfg, "id", 1, 8, 32, seed=seed * 91 + i)[0]
+            i += 1
+    res = Trainer(model, OptConfig(lr=lr, warmup_steps=5, total_steps=steps),
+                  TrainerConfig(total_steps=steps, log_every=max(steps // 4, 1))
+                  ).train(gen())
+    return res
+
+
+def _eval_loss(m, params, cfg, n=4):
+    tot = 0.0
+    for b in batches(cfg, "id", n, 8, 32, seed=777):
+        tot += float(m.loss(params, b)[0])
+    return tot / n
+
+
+def test_train_prune_finetune_workflow(key):
+    """Paper §4.3 'prune with fine-tuning': fine-tuning after SPA-L1
+    pruning recovers most of the pruning damage."""
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    m = build(cfg)
+    res = _train(m, cfg, steps=80)
+    dense_loss = _eval_loss(m, res.params, cfg)
+
+    pr = prune_model(m, res.params, ratio=0.4, criterion="l1")
+    m2 = build(pr.cfg)
+    pruned_loss = _eval_loss(m2, pr.params, pr.cfg)
+
+    ft = _train(m2, pr.cfg, steps=40, lr=1e-3, init_params=pr.params)
+    ft_loss = _eval_loss(m2, ft.params, pr.cfg)
+    assert ft_loss < pruned_loss
+    assert ft_loss < dense_loss + 0.5
+
+
+def test_prune_train_workflow(key):
+    """Paper 'prune-train': SNIP-style grouped pruning at init, then train."""
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    m = build(cfg)
+    params = m.init(key)
+    gb = batches(cfg, "id", 1, 8, 32, seed=3)[0]
+    pr = prune_model(m, params, ratio=0.4, criterion="snip", grads_batch=gb)
+    m2 = build(pr.cfg)
+    res = _train(m2, pr.cfg, steps=60, init_params=pr.params)
+    assert res.history[-1]["loss"] < res.history[0]["loss"] - 0.1
+
+
+def test_train_prune_workflow_obspa(key):
+    """Paper 'train-prune' (no fine-tuning): OBSPA on a trained model loses
+    no more than naive L1 at the same ratio."""
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    m = build(cfg)
+    res = _train(m, cfg, steps=80)
+    base = _eval_loss(m, res.params, cfg)
+
+    calib = batches(cfg, "id", 4, 8, 32, seed=11, with_targets=False)
+    ob = obspa_prune(m, res.params, 0.4, calib, recalibrate=False)
+    naive = prune_model(m, res.params, 0.4, criterion="l1")
+    l_ob = _eval_loss(build(ob.cfg), ob.params, ob.cfg)
+    l_naive = _eval_loss(build(naive.cfg), naive.params, naive.cfg)
+    assert l_ob <= l_naive + 1e-3, (l_ob, l_naive)
+    assert l_ob < base + 2.0
+
+
+def test_rf_is_real_compiled_reduction(key):
+    """RF must come from compiled HLO FLOPs, not parameter math."""
+    cfg = reduced(get_config("qwen3-1.7b"))
+    m = build(cfg)
+    params = m.init(key)
+    pr = prune_model(m, params, ratio=0.5)
+    m2 = build(pr.cfg)
+    batch = m.dummy_batch(key, 2, 32)
+    r = rf_rp(m, params, m2, pr.params, batch)
+    assert r["flops_after"] < r["flops_before"]
+    assert 1.1 < r["RF"] < 4.0
+
+
+def test_any_frontend_same_groups(key):
+    """Paper Tab. 1 adaptation: different authoring styles of the same
+    network produce the same coupled-channel structure through jaxpr."""
+    import numpy as np
+    from repro.core.graph import trace_graph
+    from repro.core.groups import build_groups
+    rng = np.random.default_rng(0)
+    w1 = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    w2 = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))
+
+    def style_matmul(p, x):
+        return jax.nn.relu(x @ p["w1"]) @ p["w2"] + x
+
+    def style_einsum(p, x):
+        h = jax.nn.relu(jnp.einsum("bi,ij->bj", x, p["w1"]))
+        return jnp.einsum("bi,ij->bj", h, p["w2"]) + x
+
+    def style_dot(p, x):
+        h = jax.nn.relu(jax.lax.dot(x, p["w1"]))
+        return jax.lax.dot(h, p["w2"]) + x
+
+    sigs = []
+    for fn in (style_matmul, style_einsum, style_dot):
+        g = trace_graph(fn, {"w1": w1, "w2": w2}, x)
+        groups = build_groups(g)
+        sig = sorted(
+            (gr.kind, gr.protected, gr.n_units,
+             tuple(sorted((s.path, s.axis) for s in gr.units[0].slices)))
+            for gr in groups)
+        sigs.append(sig)
+    assert sigs[0] == sigs[1] == sigs[2]

@@ -1,0 +1,166 @@
+"""Training runtime tests: optimizer, checkpointing, fault tolerance,
+elastic restore, gradient compression."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data.synthetic import batches
+from repro.models import build
+from repro.train import checkpoint as ckpt
+from repro.train.compress import compress_grads, init_error_state
+from repro.train.loop import (SimulatedFailure, Trainer, TrainerConfig,
+                              run_with_restarts)
+from repro.train.optim import OptConfig, init_opt_state, lr_at
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    return cfg, build(cfg)
+
+
+def _data_factory(cfg):
+    def factory(start):
+        def gen():
+            i = start
+            while True:
+                yield batches(cfg, "id", 1, 8, 32, seed=5000 + i)[0]
+                i += 1
+        return gen()
+    return factory
+
+
+def test_lr_schedule():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(lr_at(oc, jnp.int32(0))) == 0.0
+    assert abs(float(lr_at(oc, jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr_at(oc, jnp.int32(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_training_decreases_loss(small_model):
+    cfg, m = small_model
+    tc = TrainerConfig(total_steps=40, log_every=5)
+    res = Trainer(m, OptConfig(lr=3e-3, warmup_steps=5, total_steps=40),
+                  tc).train(_data_factory(cfg)(0))
+    first, last = res.history[0]["loss"], res.history[-1]["loss"]
+    assert last < first - 0.1, (first, last)
+
+
+def test_checkpoint_roundtrip(small_model, key):
+    cfg, m = small_model
+    params = m.init(key)
+    opt = init_opt_state(params)
+    with tempfile.TemporaryDirectory() as td:
+        p = ckpt.save_checkpoint(os.path.join(td, "step_00000007.ckpt"), 7,
+                                 {"params": params, "opt": opt})
+        step, state, meta = ckpt.load_checkpoint(
+            p, {"params": params, "opt": opt})
+        assert step == 7 and not meta["missing"] and not meta["extra"]
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corrupt_checkpoint_skipped(small_model, key):
+    cfg, m = small_model
+    params = m.init(key)
+    with tempfile.TemporaryDirectory() as td:
+        ckpt.save_checkpoint(ckpt.ckpt_path(td, 10), 10, {"p": params})
+        path20 = ckpt.save_checkpoint(ckpt.ckpt_path(td, 20), 20,
+                                      {"p": params})
+        with open(path20, "r+b") as f:       # corrupt the newest
+            f.seek(100)
+            f.write(b"\x00" * 64)
+        latest = ckpt.latest_checkpoint(td)
+        assert latest is not None and "00000010" in latest
+
+
+def test_failure_injection_resume_identical(small_model):
+    cfg, m = small_model
+    oc = OptConfig(lr=1e-3, warmup_steps=5, total_steps=25)
+    with tempfile.TemporaryDirectory() as td:
+        tc = TrainerConfig(total_steps=25, ckpt_dir=td, ckpt_every=10,
+                           log_every=5, fail_at_step=13)
+        res = run_with_restarts(m, oc, tc, _data_factory(cfg))
+        assert res.resumed_from == 10
+    with tempfile.TemporaryDirectory() as td:
+        tc2 = TrainerConfig(total_steps=25, ckpt_dir=td, ckpt_every=10,
+                            log_every=5)
+        res2 = Trainer(m, oc, tc2).train(_data_factory(cfg)(0))
+    for a, b in zip(jax.tree.leaves(res.params), jax.tree.leaves(res2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_too_many_failures_raises(small_model):
+    cfg, m = small_model
+    oc = OptConfig()
+    with tempfile.TemporaryDirectory() as td:
+        tc = TrainerConfig(total_steps=10, ckpt_dir=td, ckpt_every=100,
+                           fail_at_step=3)
+        with pytest.raises(SimulatedFailure):
+            # no checkpoint before step 3 -> every restart refails
+            run_with_restarts(m, oc, tc, _data_factory(cfg), max_failures=0)
+
+
+def test_elastic_restore_reshards(small_model, key):
+    """A checkpoint saved mesh-free restores onto a different mesh."""
+    from repro.launch.mesh import make_test_mesh
+    from repro.distributed.sharding import ShardingRules
+    from jax.sharding import NamedSharding
+    cfg, m = small_model
+    params = m.init(key)
+    with tempfile.TemporaryDirectory() as td:
+        p = ckpt.save_checkpoint(ckpt.ckpt_path(td, 1), 1, params)
+        mesh = make_test_mesh()              # 1-device CPU mesh
+        rules = ShardingRules.for_mesh(mesh)
+        from jax import tree_util as jtu
+        shardings = jtu.tree_map(
+            lambda ax: NamedSharding(mesh, rules.spec(ax)),
+            m.param_axes(), is_leaf=lambda t: isinstance(t, tuple))
+        _, restored, _ = ckpt.load_checkpoint(p, params, shardings)
+        for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_compression_error_feedback(small_model, key):
+    cfg, m = small_model
+    params = m.init(key)
+    g = jax.tree.map(lambda x: jnp.ones_like(x, jnp.float32) * 0.3, params)
+    err = init_error_state(params)
+    total = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+    for _ in range(8):
+        dq, err = compress_grads(g, err)
+        total = jax.tree.map(lambda t, d: t + d, total, dq)
+    # over many steps, EF makes the quantized sum converge to the true sum
+    for t, gg in zip(jax.tree.leaves(total), jax.tree.leaves(g)):
+        np.testing.assert_allclose(np.asarray(t), 8 * np.asarray(gg),
+                                   rtol=0.02, atol=0.02)
+
+
+def test_compressed_training_converges(small_model):
+    cfg, m = small_model
+    tc = TrainerConfig(total_steps=30, log_every=5, compress_grads=True)
+    res = Trainer(m, OptConfig(lr=3e-3, warmup_steps=5, total_steps=30),
+                  tc).train(_data_factory(cfg)(0))
+    assert res.history[-1]["loss"] < res.history[0]["loss"]
+
+
+def test_grad_accumulation(small_model):
+    cfg, m = small_model
+
+    def gen():
+        i = 0
+        while True:
+            b = batches(cfg, "id", 1, 8, 32, seed=9000 + i)[0]
+            # (accum, micro, ...) layout
+            yield {"tokens": b["tokens"].reshape(2, 4, 32)}
+            i += 1
+
+    tc = TrainerConfig(total_steps=10, log_every=2, accum_steps=2)
+    res = Trainer(m, OptConfig(lr=1e-3), tc).train(gen())
+    assert np.isfinite(res.history[-1]["loss"])
