@@ -58,6 +58,7 @@ SUITES = {
     "fig3": ("benchmarks.fig3_criteria", "run", {}),
     "table4": ("benchmarks.table4_obspa", "run", {}),
     "table13": ("benchmarks.table13_time", "run", {}),
+    "serving": ("benchmarks.serving", "run", {}),
 }
 
 

@@ -1,7 +1,8 @@
-"""Serving example: batched greedy decoding, dense vs OBSPA-pruned.
+"""Serving example: continuous batching, dense vs OBSPA-pruned.
 
 Structured pruning pays at serving time with zero serving-stack changes:
-the pruned model is just a smaller model.
+the pruned model is just a smaller model, so the same paged-KV engine
+serves it — only faster.
 
   PYTHONPATH=src python examples/serve_pruned.py
 """
@@ -16,33 +17,46 @@ import jax
 from repro.configs import get_config, reduced
 from repro.core.obspa import obspa_prune
 from repro.data.synthetic import batches
-from repro.launch.serve import generate
 from repro.models import build
+from repro.serve import Engine, ServeConfig
+
+PROMPT_LEN, GEN, N_REQ = 32, 32, 16
+SERVE = ServeConfig(max_seqs=8, block_size=16, max_len=PROMPT_LEN + GEN)
 
 
-def bench(model, params, prompt, gen_len=32):
-    out = generate(model, params, prompt, gen_len)   # compile
-    out.block_until_ready()
+def bench(model, params, prompts):
+    eng = Engine(model, params, SERVE)             # compiled once
+
+    def serve_once():
+        eng.reset()
+        for pr in prompts:
+            eng.add_request(pr, max_new_tokens=GEN)
+        return eng.run()
+    serve_once()                                   # compile
     t0 = time.time()
-    out = generate(model, params, prompt, gen_len)
-    out.block_until_ready()
+    out, stats = serve_once()
     dt = time.time() - t0
-    return out, prompt.shape[0] * gen_len / dt
+    n_new = sum(len(r.tokens) for r in out.values())
+    return out, n_new / dt, stats
 
 
 def main():
     cfg = reduced(get_config("tinyllama-1.1b"))
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    prompt = batches(cfg, "id", 1, 8, 32, with_targets=False)[0]["tokens"]
+    toks = batches(cfg, "id", 1, N_REQ, PROMPT_LEN,
+                   with_targets=False)[0]["tokens"]
+    # mixed prompt lengths: the scheduler batches them anyway
+    prompts = [[int(t) for t in toks[i, :PROMPT_LEN - 8 * (i % 3)]]
+               for i in range(N_REQ)]
 
-    _, tps_dense = bench(model, params, prompt)
+    _, tps_dense, _ = bench(model, params, prompts)
     print(f"dense : {tps_dense:8.1f} tok/s  ({cfg.param_count():,} params)")
 
     calib = batches(cfg, "datafree", 4, 8, 32, seed=3, with_targets=False)
     pr = obspa_prune(model, params, 0.5, calib, calib_mode="datafree")
     pruned = build(pr.cfg)
-    _, tps_pruned = bench(pruned, pr.params, prompt)
+    _, tps_pruned, _ = bench(pruned, pr.params, prompts)
     print(f"pruned: {tps_pruned:8.1f} tok/s  ({pr.cfg.param_count():,} params)"
           f"  speedup {tps_pruned / tps_dense:.2f}x")
 

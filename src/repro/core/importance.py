@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax import tree_util as jtu
 
+from repro.core.graph import keystr
 from repro.core.groups import Group
 
 CRITERIA = ("l1", "l2", "magnitude", "snip", "grasp", "crop", "random")
@@ -73,7 +74,7 @@ def unit_scores(groups: list[Group], scores, agg: str = "mean",
                 norm: str = "mean") -> dict[str, np.ndarray]:
     """Eq. 1: per-group arrays of unit scores (len == n_units)."""
     flat, _ = jtu.tree_flatten_with_path(scores)
-    by_path = {jtu.keystr(p, simple=True, separator="."): np.asarray(l)
+    by_path = {keystr(p): np.asarray(l)
                for p, l in flat}
 
     out: dict[str, np.ndarray] = {}

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax import tree_util as jtu
 
-from repro.core.graph import CompGraph, OpNode
+from repro.core.graph import CompGraph, OpNode, keystr
 from repro.core.groups import Group
 from repro.core.importance import leaf_scores, unit_scores
 from repro.core.pruner import (PruneResult, analyze, apply_pruning,
@@ -207,7 +207,7 @@ def accumulate_hessians(g: CompGraph, ap, calib_batches: list,
                         ) -> dict[tuple[int, int], np.ndarray]:
     """hkey -> inverse Hessian (B, K, K)."""
     flat, _ = jtu.tree_flatten_with_path(ap)
-    pvals = {jtu.keystr(p, simple=True, separator="."): l for p, l in flat}
+    pvals = {keystr(p): l for p, l in flat}
     every = {hkey(c): c for cs in consumers.values() for c in cs}
     shapes = {path: np.asarray(l).shape for path, l in pvals.items()}
     cap_uids = {c.x_uid for c in every.values()}
@@ -243,7 +243,7 @@ def obs_unit_scores(groups: list[Group], consumers: dict, ap,
                     Hinv: dict[int, np.ndarray], norm: str = "mean"
                     ) -> tuple[dict[str, np.ndarray], dict[str, bool]]:
     flat, _ = jtu.tree_flatten_with_path(ap)
-    by_path = {jtu.keystr(p, simple=True, separator="."): np.asarray(l, np.float32)
+    by_path = {keystr(p): np.asarray(l, np.float32)
                for p, l in flat}
     mag_scores = None
     out: dict[str, np.ndarray] = {}
@@ -294,7 +294,7 @@ def reconstruct(ap, groups: list[Group], pruned: dict[str, list[int]],
                 consumers: dict, Hinv: dict[int, np.ndarray]):
     """Apply the Eq. 13/14 sweep to every consumer, then return new params."""
     flat, treedef = jtu.tree_flatten_with_path(ap)
-    paths = [jtu.keystr(p, simple=True, separator=".") for p, _ in flat]
+    paths = [keystr(p) for p, _ in flat]
     leaves = {p: np.asarray(l) for p, l in
               zip(paths, [l for _, l in flat])}
 
@@ -363,7 +363,7 @@ def obspa_prune(model, params, ratio: float, calib_batches: list,
                                damping=damping)
     scores, has_obs = obs_unit_scores(targets, consumers, ap, Hinv, norm=norm)
 
-    shapes = {jtu.keystr(p, simple=True, separator="."): tuple(l.shape)
+    shapes = {keystr(p): tuple(l.shape)
               for p, l in jtu.tree_flatten_with_path(ap)[0]}
     pruned = select_units(targets, scores, ratio, mode=mode,
                           align_units=align_units, shapes=shapes)

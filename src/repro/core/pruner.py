@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax import tree_util as jtu
 
 from repro.configs.base import ArchConfig
-from repro.core.graph import CompGraph, trace_graph
+from repro.core.graph import CompGraph, keystr, trace_graph
 from repro.core.groups import (Group, MOE_HINTS, build_groups, merge_by_hints)
 from repro.core.importance import (hessian_grad_product, leaf_scores,
                                    unit_scores)
@@ -188,7 +188,7 @@ def delete_positions(groups: list[Group], pruned: dict[str, list[int]],
 
 def apply_pruning(analysis_params, dele: dict[tuple[str, int], set[int]]):
     flat, treedef = jtu.tree_flatten_with_path(analysis_params)
-    paths = [jtu.keystr(p, simple=True, separator=".") for p, _ in flat]
+    paths = [keystr(p) for p, _ in flat]
     leaves = [l for _, l in flat]
     by_path: dict[str, list[tuple[int, set[int]]]] = {}
     for (path, axis), pos in dele.items():
@@ -271,7 +271,7 @@ def prune_model(model, params, ratio: float, criterion: str = "l1",
     scores_tree = leaf_scores(ap, criterion, grads=grads, hg=hg, seed=seed)
     scores = unit_scores(targets, scores_tree, agg=agg, norm=norm)
 
-    shapes = {jtu.keystr(p, simple=True, separator="."): tuple(l.shape)
+    shapes = {keystr(p): tuple(l.shape)
               for p, l in jtu.tree_flatten_with_path(ap)[0]}
     pruned = select_units(targets, scores, ratio, mode=mode,
                           align_units=align_units, shapes=shapes,

@@ -1,0 +1,4 @@
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_reference
+
+__all__ = ["paged_attention", "paged_attention_reference"]

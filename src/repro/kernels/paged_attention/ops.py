@@ -1,0 +1,32 @@
+"""Dispatch for paged decode attention: Pallas kernel vs jnp reference.
+
+The kernel requires a *static* python-int window (mask folded into the
+kernel at trace time); a per-sequence dynamic window (Hymba hybrid layers,
+where the window is data under ``lax.scan``) falls back to the reference
+path, which takes window as an array.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_attention_reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, kv_lens, *,
+                    window=0, scale: float | None = None,
+                    use_kernel: bool = True, interpret: bool | None = None):
+    """q (B, H, D); pools (P, bs, KH, D/DV) -> (B, H, DV)."""
+    if use_kernel and isinstance(window, int):
+        if interpret is None:
+            interpret = not _on_tpu()
+        return paged_attention_kernel(
+            q, k_pool, v_pool, block_tables, kv_lens,
+            window=window, scale=scale, interpret=interpret)
+    return paged_attention_reference(
+        q, k_pool, v_pool, block_tables, kv_lens,
+        window=window, scale=scale)

@@ -1,0 +1,111 @@
+"""Pallas TPU paged decode attention over a block-table-indexed KV pool.
+
+Grid (B, KH, NB); the block dimension is innermost so the f32 online-softmax
+accumulators (acc, running max m, running sum l) persist in VMEM scratch
+across the KV blocks of one (seq, kv-head) pair.  The block table and the
+per-sequence lengths ride in as *scalar prefetch* operands
+(``pltpu.PrefetchScalarGridSpec``): the K/V BlockSpec index maps read
+``tables[b, j]`` to DMA the j-th logical block of sequence b from wherever
+it lives in the pool — the gathered (B, S, KH, D) history is never
+materialized, which is the whole point of paging.
+
+GQA is handled as in ``flash_attention``: one grid step processes the G
+query heads of a KV head as a (G, D) tile, so K/V blocks are read once per
+KV head, not once per query head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(lens_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale: float, window: int,
+            block_size: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)                # (bs, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    kv_len = lens_ref[b]
+    idx = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = idx < kv_len                                   # (G, bs)
+    if window:
+        mask &= idx > kv_len - 1 - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (G, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                # (G, bs)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+
+    v = v_ref[0, :, 0].astype(jnp.float32)                # (bs, DV)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(j == nb - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q, k_pool, v_pool, block_tables, kv_lens, *,
+                           window: int = 0, scale: float | None = None,
+                           interpret: bool = True):
+    """q (B, H, D); pools (P, bs, KH, D/DV); tables (B, NB); lens (B,)."""
+    B, H, D = q.shape
+    bs, KH, DV = k_pool.shape[1], k_pool.shape[2], v_pool.shape[3]
+    NB = block_tables.shape[1]
+    G = H // KH
+    scale = scale if scale is not None else D ** -0.5
+
+    qg = q.reshape(B, KH, G, D)
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               block_size=bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KH, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, j, lens, tables: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, j, lens, tables: (tables[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, DV),
+                         lambda b, h, j, lens, tables: (tables[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, DV),
+                               lambda b, h, j, lens, tables: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, DV), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, DV), q.dtype),
+        interpret=interpret,
+    )(kv_lens.astype(jnp.int32), block_tables.astype(jnp.int32),
+      qg, k_pool, v_pool)
+    return out.reshape(B, H, DV)

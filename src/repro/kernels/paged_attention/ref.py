@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for paged decode attention.
+
+One query token per sequence attends over a KV history stored in
+non-contiguous fixed-size blocks of a shared pool, addressed through a
+per-sequence block table (vLLM-style paging).
+
+Shapes:
+  q            (B, H, D)         one decode token per sequence, H = KH * G
+  k_pool       (P, bs, KH, D)    shared block pool (P blocks of bs tokens)
+  v_pool       (P, bs, KH, DV)
+  block_tables (B, NB) int32     pool index of each logical block
+  kv_lens      (B,)    int32     valid tokens per sequence (incl. current)
+  window       int | (B,) array  0 = full causal; >0 = sliding window
+
+Output (B, H, DV).  The reference materializes the gathered history
+(B, NB*bs, KH, D); the Pallas kernel never does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_reference(q, k_pool, v_pool, block_tables, kv_lens, *,
+                              window=0, scale: float | None = None
+                              ) -> jax.Array:
+    B, H, D = q.shape
+    bs, KH = k_pool.shape[1], k_pool.shape[2]
+    NB = block_tables.shape[1]
+    G = H // KH
+    scale = scale if scale is not None else D ** -0.5
+
+    k = k_pool[block_tables].reshape(B, NB * bs, KH, -1)   # (B, S, KH, D)
+    v = v_pool[block_tables].reshape(B, NB * bs, KH, -1)
+
+    qg = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    idx = jnp.arange(NB * bs, dtype=jnp.int32)[None, :]     # (1, S)
+    lens = kv_lens[:, None]
+    valid = idx < lens
+    win = jnp.asarray(window, jnp.int32)
+    if win.ndim == 0:
+        win = jnp.broadcast_to(win, (B,))
+    valid &= (win[:, None] <= 0) | (idx > lens - 1 - win[:, None])
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, v.shape[-1]).astype(q.dtype)

@@ -14,7 +14,10 @@ from repro.distributed.sharding import ShardingRules
 
 
 def _mk(shape, axes) -> Mesh:
-    from jax.sharding import AxisType
+    try:
+        from jax.sharding import AxisType
+    except ImportError:      # JAX < 0.5: all mesh axes are Auto already
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))
 

@@ -1,11 +1,15 @@
-"""Batched serving driver: prefill + greedy decode with the KV/SSM cache.
+"""Serving CLI: continuous-batching engine over the paged KV cache.
 
 Serves dense or SPA/OBSPA-pruned models — the point of structured pruning
 is that the pruned model is a *plain smaller model*: the serving path is
-unchanged, it just compiles to fewer FLOPs.
+unchanged, it just compiles to fewer FLOPs (see DESIGN.md §8).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-      --reduced --batch 8 --prompt-len 32 --gen 32 [--prune-ratio 0.5]
+      --reduced --requests 16 --prompt-len 32 --gen 32 \
+      --max-seqs 8 --block-size 16 [--prune-ratio 0.5] [--temperature 0.8]
+
+``generate`` (sequential, token-by-token) is kept as the correctness
+oracle the engine is tested against (tests/test_serve.py).
 """
 from __future__ import annotations
 
@@ -22,13 +26,15 @@ from repro.models import build
 
 def generate(model, params, prompt: jax.Array, gen_len: int,
              max_len: int | None = None):
-    """Greedy generation.  prompt (B, P) int32 -> (B, P+gen_len)."""
+    """Sequential greedy generation (reference implementation).
+
+    prompt (B, P) int32 -> (B, P+gen_len).  The contiguous-cache,
+    single-position decode loop the paged engine must match token-for-token.
+    """
     B, P = prompt.shape
     max_len = max_len or (P + gen_len)
     cache = model.init_cache(batch=B, max_len=max_len)
     step = jax.jit(model.decode_step)
-    # prefill token-by-token through the decode path (single code path);
-    # production prefill lowers the full-sequence forward (see dryrun.py)
     logits = None
     for t in range(P):
         logits, cache = step(params, cache, prompt[:, t], jnp.int32(t))
@@ -39,13 +45,28 @@ def generate(model, params, prompt: jax.Array, gen_len: int,
     return jnp.concatenate([prompt, jnp.stack(toks, 1)], axis=1)
 
 
+def build_engine(cfg, model, params, args):
+    from repro.serve import Engine, ServeConfig
+    return Engine(model, params, ServeConfig(
+        max_seqs=args.max_seqs, block_size=args.block_size,
+        max_len=args.max_len or (args.prompt_len + args.gen),
+        num_blocks=args.num_blocks, seed=args.seed))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-seqs", type=int, default=8)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="KV pool blocks (0 = worst-case sized)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--prune-ratio", type=float, default=0.0)
     ap.add_argument("--obspa", action="store_true",
                     help="prune with OBSPA (data-free) instead of SPA-L1")
@@ -72,21 +93,28 @@ def main():
         model, params = build(pr.cfg), pr.params
         print(f"serving pruned model: {pr.cfg.name}")
 
-    prompt = batches(cfg, "id", 1, args.batch, args.prompt_len,
-                     with_targets=False)[0]["tokens"]
+    # variable-length prompts: realistic continuous-batching traffic
+    toks = batches(cfg, "id", 1, args.requests, args.prompt_len,
+                   with_targets=False)[0]["tokens"]
+    lens = [max(4, args.prompt_len - (i % 4) * (args.prompt_len // 8))
+            for i in range(args.requests)]
+
+    engine = build_engine(cfg, model, params, args)
     t0 = time.time()
-    out = generate(model, params, prompt, args.gen)
-    out.block_until_ready()
+    for i in range(args.requests):
+        engine.add_request([int(t) for t in toks[i, :lens[i]]],
+                           max_new_tokens=args.gen,
+                           temperature=args.temperature)
+    out, stats = engine.run()
     dt = time.time() - t0
-    n_new = args.batch * args.gen
-    print(f"generated {n_new} tokens in {dt:.2f}s "
-          f"({n_new / dt:.1f} tok/s incl. compile)")
-    t0 = time.time()
-    out = generate(model, params, prompt, args.gen)
-    out.block_until_ready()
-    dt = time.time() - t0
-    print(f"warm: {n_new / dt:.1f} tok/s")
-    print("sample token ids:", out[0, args.prompt_len:][:16].tolist())
+    n_new = sum(len(r.tokens) for r in out.values())
+    print(f"served {len(out)} requests / {n_new} new tokens in {dt:.2f}s "
+          f"(incl. compile)")
+    print(f"decode {stats['decode_tok_per_s']:.1f} tok/s | "
+          f"prefill+decode {stats['total_tok_per_s']:.1f} tok/s | "
+          f"{stats['steps']:.0f} steps")
+    first = out[min(out)]
+    print("sample token ids:", first.tokens[:16])
 
 
 if __name__ == "__main__":

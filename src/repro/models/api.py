@@ -63,6 +63,16 @@ class Model:
     def decode_step(self, params, cache, tokens, pos):
         return tf.decode_step(params, self.cfg, cache, tokens, pos)
 
+    # ----- paged serving (continuous batching; repro.serve) -----
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         max_seqs: int) -> dict:
+        return tf.init_paged_cache(self.cfg, num_blocks, block_size, max_seqs)
+
+    def paged_decode_step(self, params, cache, tokens, positions,
+                          block_tables):
+        return tf.paged_decode_step(params, self.cfg, cache, tokens,
+                                    positions, block_tables)
+
     # ----- shapes -----
     def batch_spec(self, shape: ShapeConfig, with_targets: bool) -> dict:
         cfg = self.cfg

@@ -159,6 +159,39 @@ def attention_decode(params: dict, cfg, x: jax.Array, pos: jax.Array,
     return out, KVCache(ck, cv)
 
 
+def attention_paged_decode(params: dict, cfg, x: jax.Array,
+                           positions: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           window=0) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode over a paged KV pool (continuous batching).
+
+    x (B,1,d); positions (B,) int32 — per-sequence write index (sequences in
+    a serving batch are at *different* depths, unlike ``attention_decode``'s
+    single scalar pos).  k/v_pool (P, bs, KH, hd/vhd) are one layer's slice
+    of the shared block pool; block_tables (B, NB) maps logical to pool
+    blocks.  window: python int for static masking (Pallas-able) or a (B,)
+    array for per-sequence dynamic windows (hybrid layers; reference path).
+
+    Returns (out (B,1,d), new k_pool, new v_pool).
+    """
+    from repro.kernels.paged_attention import paged_attention
+
+    B = x.shape[0]
+    bs = k_pool.shape[1]
+    q, k_new, v_new = _qkv(params, cfg, x, positions[:, None])
+    blk = jnp.take_along_axis(block_tables, (positions // bs)[:, None],
+                              axis=1)[:, 0]
+    off = positions % bs
+    k_pool = k_pool.at[blk, off].set(k_new[:, 0])
+    v_pool = v_pool.at[blk, off].set(v_new[:, 0])
+    qf = q.reshape(B, q.shape[2] * q.shape[3], q.shape[4])
+    o = paged_attention(qf, k_pool, v_pool, block_tables, positions + 1,
+                        window=window, use_kernel=cfg.use_pallas)
+    o = o[:, None]                                       # (B, 1, H, vhd)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return out, k_pool, v_pool
+
+
 def attention_flops(cfg, batch: int, seq: int, causal: bool = True) -> int:
     """Analytic attention matmul FLOPs (for MODEL_FLOPS accounting)."""
     H, hd = cfg.n_heads, cfg.head_dim_

@@ -309,53 +309,53 @@ def cache_axes(cfg: ArchConfig, long_context: bool = False) -> dict:
     return axes
 
 
-def decode_step(params: dict, cfg: ArchConfig, cache: dict,
-                tokens: jax.Array, pos: jax.Array) -> tuple[jax.Array, dict]:
-    """One decode step.  tokens (B,) int32, pos scalar int32.
+def _decode_layer(lp: dict, lc: dict, flag, h: jax.Array, cfg: ArchConfig,
+                  attn_fn, ssm_cache_fn) -> tuple[jax.Array, dict]:
+    """One decode layer, shared by the contiguous and paged cache paths.
 
-    Returns (logits (B, V), updated cache).
+    ``attn_fn(attn_params, hn, lc, flag) -> (a_out, kv_out_cache)`` and
+    ``ssm_cache_fn(lc) -> SSMCache`` encapsulate everything the two cache
+    layouts disagree on; the residual/FFN scaffolding stays single-source.
     """
-    x = jnp.take(params["tok_embed"], tokens[:, None], axis=0)  # (B,1,d)
+    out_cache: dict[str, Any] = {}
+    hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        delta, new_sc = ssm_mod.ssm_decode(lp["ssm"], cfg, hn,
+                                           ssm_cache_fn(lc))
+        h = h + delta
+        out_cache["conv"], out_cache["state"] = new_sc.conv, new_sc.state
+        return h, out_cache
+    a_out, kv_out = attn_fn(lp["attn"], hn, lc, flag)
+    if cfg.hybrid:
+        s_out, new_sc = ssm_mod.ssm_decode(lp["ssm"], cfg, hn,
+                                           ssm_cache_fn(lc))
+        h = h + a_out + s_out
+        out_cache["conv"], out_cache["state"] = new_sc.conv, new_sc.state
+    else:
+        h = h + a_out
+    out_cache.update(kv_out)
+    if cfg.n_experts:
+        h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        m_out, _ = moe_mod.moe_block(lp["moe"], cfg, h2)
+        h = h + m_out
+    elif cfg.d_ff:
+        h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + swiglu(lp["mlp"], h2)
+    return h, out_cache
+
+
+def _run_decode_layers(params: dict, cfg: ArchConfig, cache: dict,
+                       x: jax.Array, attn_fn, ssm_cache_fn
+                       ) -> tuple[jax.Array, dict]:
+    """Scan/unrolled layer loop + logits epilogue shared by both paths."""
     flags = _is_global_flags(cfg)
 
     def body(carry, xs):
-        h = carry
         lp, lc, flag = xs
-        out_cache = {}
-        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
-        if cfg.family == "ssm":
-            delta, new_sc = ssm_mod.ssm_decode(
-                lp["ssm"], cfg, hn, ssm_mod.SSMCache(lc["conv"], lc["state"]))
-            h = h + delta
-            out_cache["conv"], out_cache["state"] = new_sc.conv, new_sc.state
-        else:
-            kvc = attn.KVCache(lc["k"], lc["v"])
-            if cfg.hybrid:
-                win = jnp.where(flag, jnp.int32(2**30),
-                                jnp.int32(cfg.sliding_window))
-                a_out, new_kv = attn.attention_decode(
-                    lp["attn"], cfg, hn, pos, kvc, "sliding", window=win)
-                s_out, new_sc = ssm_mod.ssm_decode(
-                    lp["ssm"], cfg, hn, ssm_mod.SSMCache(lc["conv"], lc["state"]))
-                h = h + a_out + s_out
-                out_cache["conv"], out_cache["state"] = new_sc.conv, new_sc.state
-            else:
-                a_out, new_kv = attn.attention_decode(
-                    lp["attn"], cfg, hn, pos, kvc, "causal")
-                h = h + a_out
-            out_cache["k"], out_cache["v"] = new_kv.k, new_kv.v
-            if cfg.n_experts:
-                h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
-                m_out, _ = moe_mod.moe_block(lp["moe"], cfg, h2)
-                h = h + m_out
-            elif cfg.d_ff:
-                h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
-                h = h + swiglu(lp["mlp"], h2)
-        return h, out_cache
+        return _decode_layer(lp, lc, flag, carry, cfg, attn_fn, ssm_cache_fn)
 
     if cfg.use_scan:
-        (h), new_cache = jax.lax.scan(
-            body, x, (params["layers"], cache, flags))
+        h, new_cache = jax.lax.scan(body, x, (params["layers"], cache, flags))
     else:
         h = x
         per_layer_caches = []
@@ -364,11 +364,101 @@ def decode_step(params: dict, cfg: ArchConfig, cache: dict,
             lc = jax.tree.map(lambda a, i=i: a[i], cache)
             h, oc = body(h, (lp, lc, flags[i]))
             per_layer_caches.append(oc)
-        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                 *per_layer_caches)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer_caches)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     logits = logits_from_hidden(params, cfg, h)[:, 0]
     return logits, new_cache
+
+
+def decode_step(params: dict, cfg: ArchConfig, cache: dict,
+                tokens: jax.Array, pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One decode step.  tokens (B,) int32, pos scalar int32.
+
+    Returns (logits (B, V), updated cache).
+    """
+    x = jnp.take(params["tok_embed"], tokens[:, None], axis=0)  # (B,1,d)
+
+    def attn_fn(ap, hn, lc, flag):
+        kvc = attn.KVCache(lc["k"], lc["v"])
+        if cfg.hybrid:
+            win = jnp.where(flag, jnp.int32(2**30),
+                            jnp.int32(cfg.sliding_window))
+            a_out, new_kv = attn.attention_decode(
+                ap, cfg, hn, pos, kvc, "sliding", window=win)
+        else:
+            a_out, new_kv = attn.attention_decode(
+                ap, cfg, hn, pos, kvc, "causal")
+        return a_out, {"k": new_kv.k, "v": new_kv.v}
+
+    def ssm_cache_fn(lc):
+        return ssm_mod.SSMCache(lc["conv"], lc["state"])
+
+    return _run_decode_layers(params, cfg, cache, x, attn_fn, ssm_cache_fn)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (continuous-batching serving; see DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
+                     max_seqs: int) -> dict:
+    """Block-pool KV cache + per-slot SSM state.
+
+    KV lives in a shared pool of ``num_blocks`` blocks of ``block_size``
+    tokens (block 0 is the reserved null block that idle slots write into);
+    SSM/conv state is O(1) per sequence, so it is a plain per-slot tensor —
+    paging it would buy nothing.
+    """
+    dt = dtype_of(cfg.dtype)
+    L = cfg.num_layers
+    cache: dict[str, Any] = {}
+    if cfg.family != "ssm":
+        KH, hd, vhd = cfg.n_kv_heads, cfg.head_dim_, cfg.v_head_dim_
+        cache["k"] = jnp.zeros((L, num_blocks, block_size, KH, hd), dt)
+        cache["v"] = jnp.zeros((L, num_blocks, block_size, KH, vhd), dt)
+    if cfg.family == "ssm" or cfg.hybrid:
+        sc = ssm_mod.init_ssm_cache(cfg, max_seqs, dt)
+        cache["conv"] = jnp.array(
+            jnp.broadcast_to(sc.conv[None], (L,) + sc.conv.shape))
+        cache["state"] = jnp.array(
+            jnp.broadcast_to(sc.state[None], (L,) + sc.state.shape))
+    return cache
+
+
+def paged_decode_step(params: dict, cfg: ArchConfig, cache: dict,
+                      tokens: jax.Array, positions: jax.Array,
+                      block_tables: jax.Array) -> tuple[jax.Array, dict]:
+    """One continuous-batching decode step.
+
+    tokens (B,) int32; positions (B,) int32 per-slot write index (slots may
+    be at different depths — this is what ``decode_step``'s scalar pos can't
+    express); block_tables (B, NB) int32.  Returns (logits (B, V), cache).
+    """
+    x = jnp.take(params["tok_embed"], tokens[:, None], axis=0)  # (B,1,d)
+    B = tokens.shape[0]
+    # slots at position 0 start a (re-)prefill: their recurrent SSM/conv
+    # state is from a previous occupant (or idle-step garbage) and must be
+    # zeroed before use — KV needs no such reset, reads are length-masked
+    fresh = positions == 0
+
+    def attn_fn(ap, hn, lc, flag):
+        if cfg.hybrid:
+            win = jnp.where(flag, jnp.int32(2**30),
+                            jnp.int32(cfg.sliding_window))
+            win = jnp.broadcast_to(win, (B,))    # dynamic -> reference path
+        else:
+            win = 0
+        a_out, kp, vp = attn.attention_paged_decode(
+            ap, cfg, hn, positions, lc["k"], lc["v"], block_tables,
+            window=win)
+        return a_out, {"k": kp, "v": vp}
+
+    def ssm_cache_fn(lc):
+        return ssm_mod.SSMCache(
+            jnp.where(fresh[:, None, None], 0, lc["conv"]),
+            jnp.where(fresh[:, None, None, None], 0, lc["state"]))
+
+    return _run_decode_layers(params, cfg, cache, x, attn_fn, ssm_cache_fn)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,7 @@
+from repro.serve.engine import Engine, FinishedRequest, ServeConfig
+from repro.serve.kv_cache import BlockAllocator, OutOfBlocks, PagedCache
+from repro.serve.scheduler import FCFSScheduler, Request, RequestState
+
+__all__ = ["Engine", "FinishedRequest", "ServeConfig", "BlockAllocator",
+           "OutOfBlocks", "PagedCache", "FCFSScheduler", "Request",
+           "RequestState"]

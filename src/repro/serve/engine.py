@@ -1,0 +1,189 @@
+"""Continuous-batching inference engine over the paged KV/SSM cache.
+
+One jit-compiled step serves every in-flight request: slots in prefill
+feed their next known token, slots in decode feed their last sample, and
+idle slots feed a null token into the reserved null block.  Shapes are
+fixed at (max_seqs,) so the step compiles exactly once per model.
+
+Dense and SPA/OBSPA-pruned models go through the same code path — a
+pruned model is a plain smaller ``ArchConfig``, so serving it is just
+building the engine on the pruned config/params (the paper's "direct
+computational benefit" made measurable; benchmarks/serving.py).
+
+Sampling: per-request temperature, 0 = greedy argmax; both resolved
+inside the jitted step so host<->device traffic per step is one (B,)
+token transfer each way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.kv_cache import PagedCache
+from repro.serve.scheduler import FCFSScheduler, Request, RequestState
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seqs: int = 8                 # decode slots = max batch per step
+    block_size: int = 16              # tokens per KV block
+    max_len: int = 512                # per-sequence token capacity
+    num_blocks: int = 0               # 0 -> pool sized for worst case
+    seed: int = 0
+
+    @property
+    def blocks_per_seq(self) -> int:
+        return -(-self.max_len // self.block_size)
+
+    def pool_blocks(self) -> int:
+        if self.num_blocks:
+            return self.num_blocks
+        # worst case every slot full, +1 for the reserved null block
+        return self.max_seqs * self.blocks_per_seq + 1
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    rid: int
+    prompt: tuple[int, ...]
+    tokens: list[int]                 # generated tokens
+    preemptions: int
+    steps: int                        # engine steps, first admission -> finish
+
+
+class Engine:
+    def __init__(self, model, params, cfg: ServeConfig | None = None):
+        if not model.cfg.has_decode:
+            raise ValueError(f"{model.cfg.name} has no decode path")
+        if model.cfg.family == "vlm":
+            raise ValueError("vlm serving needs patch prefill (not supported)")
+        self.model = model
+        self.params = params
+        self.cfg = cfg or ServeConfig()
+        self.cache = model.init_paged_cache(
+            num_blocks=self.cfg.pool_blocks(),
+            block_size=self.cfg.block_size,
+            max_seqs=self.cfg.max_seqs)
+        self._step_fn = jax.jit(self._step_impl, donate_argnums=(1,))
+        self.reset()
+
+    def reset(self) -> None:
+        """Clear all request/allocator state; keep params, pools, and the
+        compiled step (stale pool contents are dead: reads are gated by
+        per-slot positions and SSM state re-zeroes at position 0)."""
+        self.cache_host = PagedCache(
+            max_seqs=self.cfg.max_seqs,
+            num_blocks=self.cfg.pool_blocks(),
+            block_size=self.cfg.block_size,
+            max_blocks_per_seq=self.cfg.blocks_per_seq)
+        self.scheduler = FCFSScheduler(self.cache_host)
+        self._key = jax.random.PRNGKey(self.cfg.seed)
+        self._rid = 0
+        self._steps = 0
+        self._decode_tokens = 0
+        self._prefill_tokens = 0
+        self._admit_step: dict[int, int] = {}
+        self._finish_step: dict[int, int] = {}
+
+    # ----- jitted step -----
+    def _step_impl(self, params, cache, tokens, positions, block_tables,
+                   temps, key):
+        logits, cache = self.model.paged_decode_step(
+            params, cache, tokens, positions, block_tables)
+        greedy = jnp.argmax(logits, axis=-1)
+        temps_safe = jnp.maximum(temps, 1e-6)[:, None]
+        sampled = jax.random.categorical(key, logits / temps_safe, axis=-1)
+        nxt = jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+        return nxt, cache
+
+    # ----- public API -----
+    def add_request(self, prompt: Iterable[int], max_new_tokens: int = 32,
+                    temperature: float = 0.0,
+                    stop_tokens: Iterable[int] = ()) -> int:
+        rid = self._rid
+        self._rid += 1
+        self.scheduler.add(Request(
+            rid=rid, prompt=tuple(int(t) for t in prompt),
+            max_new_tokens=max_new_tokens, temperature=temperature,
+            stop_tokens=tuple(stop_tokens)))
+        return rid
+
+    def step(self) -> list[RequestState]:
+        """One engine step: schedule, run the batch, fold results back."""
+        running = list(self.scheduler.schedule())
+        for s in running:
+            self._admit_step.setdefault(s.req.rid, self._steps)
+        if not running:
+            return []
+        B = self.cfg.max_seqs
+        tokens = np.zeros((B,), np.int32)
+        positions = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        for s in running:
+            tokens[s.slot] = s.next_token
+            positions[s.slot] = s.num_cached
+            temps[s.slot] = s.req.temperature
+
+        self._key, sub = jax.random.split(self._key)
+        nxt, self.cache = self._step_fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(self.cache_host.tables),
+            jnp.asarray(temps), sub)
+        nxt = np.asarray(nxt)
+
+        self._steps += 1
+        for s in running:
+            was_last_known = s.num_cached == s.seq_len - 1
+            s.num_cached += 1
+            if not was_last_known:        # still streaming known tokens
+                self._prefill_tokens += 1
+                continue
+            self._decode_tokens += 1
+            tok = int(nxt[s.slot])
+            s.generated.append(tok)
+            if tok in s.req.stop_tokens:
+                s.stopped = True
+            if s.done:
+                self._finish_step[s.req.rid] = self._steps
+        return running
+
+    def run(self, requests: Iterable[dict[str, Any]] | None = None
+            ) -> tuple[dict[int, FinishedRequest], dict[str, float]]:
+        """Drive until the queue drains.  Returns ({rid: result}, stats)."""
+        if requests:
+            for r in requests:
+                self.add_request(**r)
+        # snapshot so repeated run() calls report THIS drain only
+        steps0, dec0, pre0 = self._steps, self._decode_tokens, \
+            self._prefill_tokens
+        fin0 = len(self.scheduler.finished)
+        t0 = time.time()
+        while self.scheduler.has_work:
+            self.step()
+        dt = time.time() - t0
+
+        out = {}
+        for s in self.scheduler.finished[fin0:]:
+            rid = s.req.rid
+            out[rid] = FinishedRequest(
+                rid=rid, prompt=s.req.prompt, tokens=list(s.generated),
+                preemptions=s.preemptions,
+                steps=(self._finish_step.get(rid, self._steps)
+                       - self._admit_step.get(rid, 0)))
+        dec = self._decode_tokens - dec0
+        pre = self._prefill_tokens - pre0
+        stats = {
+            "wall_s": dt,
+            "steps": float(self._steps - steps0),
+            "decode_tokens": float(dec),
+            "prefill_tokens": float(pre),
+            "decode_tok_per_s": dec / max(dt, 1e-9),
+            "total_tok_per_s": (dec + pre) / max(dt, 1e-9),
+        }
+        return out, stats

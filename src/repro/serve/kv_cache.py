@@ -1,0 +1,107 @@
+"""Block-pool KV/SSM cache management for continuous batching.
+
+The device side (the pools themselves) is built by
+``Model.init_paged_cache``; this module owns the *host* side: a free-list
+allocator over pool blocks and the per-slot block tables the engine feeds
+to each jitted step (per-slot lengths ride along as the ``positions``
+step input, derived from scheduler state).
+
+Invariants (enforced; tested in tests/test_serve.py):
+  - block 0 is the reserved null block (idle slots write there) and is
+    never allocated;
+  - a block is owned by at most one slot at a time (no double alloc);
+  - freeing returns exactly the blocks a slot held (double free raises).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class OutOfBlocks(Exception):
+    """Raised when the pool cannot satisfy an allocation (caller preempts)."""
+
+
+class BlockAllocator:
+    """LIFO free-list over ``num_blocks`` pool blocks; block 0 reserved."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need at least 2 blocks (one is the null block)")
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))
+        self._used: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int = 1) -> list[int]:
+        if n > len(self._free):
+            raise OutOfBlocks(f"need {n} blocks, have {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        self._used.update(out)
+        return out
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            if b not in self._used:
+                raise ValueError(f"double free / foreign block {b}")
+            self._used.remove(b)
+            self._free.append(b)
+
+    def check(self) -> None:
+        """Invariant: free + used partition blocks 1..N-1, 0 untouched."""
+        assert 0 not in self._used and 0 not in self._free
+        assert not (set(self._free) & self._used)
+        assert len(self._free) + len(self._used) == self.num_blocks - 1
+
+
+@dataclasses.dataclass
+class PagedCache:
+    """Host-side paged-cache bookkeeping for ``max_seqs`` decode slots."""
+
+    max_seqs: int
+    num_blocks: int
+    block_size: int
+    max_blocks_per_seq: int
+
+    def __post_init__(self):
+        self.allocator = BlockAllocator(self.num_blocks)
+        # null block 0 everywhere: idle slots harmlessly write into it
+        self.tables = np.zeros((self.max_seqs, self.max_blocks_per_seq),
+                               np.int32)
+        self._owned: list[list[int]] = [[] for _ in range(self.max_seqs)]
+
+    @property
+    def max_len(self) -> int:
+        return self.max_blocks_per_seq * self.block_size
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Grow slot's table to cover ``n_tokens``; raises OutOfBlocks."""
+        if n_tokens > self.max_len:
+            raise OutOfBlocks(
+                f"{n_tokens} tokens > per-seq capacity {self.max_len}")
+        need = self.blocks_for(n_tokens) - len(self._owned[slot])
+        if need <= 0:
+            return
+        new = self.allocator.alloc(need)
+        start = len(self._owned[slot])
+        self._owned[slot].extend(new)
+        self.tables[slot, start:start + len(new)] = new
+
+    def release(self, slot: int) -> None:
+        self.allocator.free(self._owned[slot])
+        self._owned[slot] = []
+        self.tables[slot] = 0
+
+    def owned(self, slot: int) -> list[int]:
+        return list(self._owned[slot])

@@ -1,0 +1,168 @@
+"""FCFS continuous-batching scheduler.
+
+Requests wait in arrival order; each engine step the scheduler (a) retires
+finished requests and frees their blocks, (b) grows the block tables of
+running requests that crossed a block boundary — preempting the *youngest*
+running request back to the waiting queue when the pool is exhausted
+(vLLM-style recompute preemption: its blocks are freed and its
+prompt+generated prefix is re-prefilled on re-admission), and (c) admits
+waiting requests into free slots while the pool can hold their prefix.
+
+Prefill and decode share one batched step: an admitted request first
+streams its known tokens through the decode path (logits discarded until
+the prefix is exhausted), then flips to sampling — so a step may mix
+prefilling and decoding sequences, which is exactly continuous batching.
+
+Token-feed invariant (engine + scheduler contract): a request's sequence
+so far is ``seq = prompt + generated``; each step feeds ``seq[num_cached]``
+at position ``num_cached``; after the step ``num_cached += 1`` and the
+sampled token is appended iff ``num_cached == len(seq)`` (i.e. the model
+just saw the last known token).  This one rule covers fresh prefill,
+steady-state decode, and re-prefill after preemption.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Sequence
+
+from repro.serve.kv_cache import OutOfBlocks, PagedCache
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    prompt: tuple[int, ...]
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 -> greedy
+    stop_tokens: tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class RequestState:
+    req: Request
+    slot: int = -1                    # -1 -> not admitted
+    num_cached: int = 0               # tokens written to the KV pool
+    generated: list[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+    stopped: bool = False
+
+    @property
+    def seq_len(self) -> int:
+        return len(self.req.prompt) + len(self.generated)
+
+    @property
+    def next_token(self) -> int:
+        """Token to feed at position ``num_cached`` this step."""
+        i = self.num_cached
+        P = len(self.req.prompt)
+        return self.req.prompt[i] if i < P else self.generated[i - P]
+
+    @property
+    def phase(self) -> str:
+        return "prefill" if self.num_cached < self.seq_len - 1 else "decode"
+
+    @property
+    def done(self) -> bool:
+        return self.stopped or len(self.generated) >= self.req.max_new_tokens
+
+    def reset_for_preemption(self) -> None:
+        self.slot = -1
+        self.num_cached = 0
+        self.preemptions += 1
+
+
+class FCFSScheduler:
+    def __init__(self, cache: PagedCache):
+        self.cache = cache
+        self.waiting: deque[RequestState] = deque()
+        self.running: list[RequestState] = []
+        self.finished: list[RequestState] = []
+        self._free_slots = list(range(cache.max_seqs - 1, -1, -1))
+
+    # ----- queue -----
+    def add(self, req: Request) -> RequestState:
+        if len(req.prompt) + req.max_new_tokens > self.cache.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new "
+                f"{len(req.prompt) + req.max_new_tokens} exceeds per-seq "
+                f"capacity {self.cache.max_len}")
+        # worst-case block need must fit the pool even running alone,
+        # otherwise admit() can never succeed and the queue stalls forever
+        worst = self.cache.blocks_for(len(req.prompt) + req.max_new_tokens)
+        usable = self.cache.allocator.num_blocks - 1
+        if worst > usable:
+            raise ValueError(
+                f"request {req.rid}: needs up to {worst} blocks but the "
+                f"pool has {usable} usable")
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        st = RequestState(req)
+        self.waiting.append(st)
+        return st
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # ----- per-step transitions -----
+    def retire_finished(self) -> list[RequestState]:
+        done = [s for s in self.running if s.done]
+        for s in done:
+            self._release(s)
+            self.finished.append(s)
+        return done
+
+    def _release(self, s: RequestState) -> None:
+        self.running.remove(s)
+        self.cache.release(s.slot)
+        self._free_slots.append(s.slot)
+        s.slot = -1
+
+    def grow_or_preempt(self) -> list[RequestState]:
+        """Reserve room for each running seq's next token; preempt on OOM."""
+        preempted: list[RequestState] = []
+        # oldest first, so the youngest is the victim under pressure
+        for s in sorted(self.running, key=lambda r: r.req.rid):
+            if s not in self.running:          # preempted earlier this round
+                continue
+            while True:
+                try:
+                    self.cache.ensure(s.slot, s.num_cached + 1)
+                    break
+                except OutOfBlocks:
+                    victim = max(self.running, key=lambda r: r.req.rid)
+                    if victim is s and len(self.running) == 1:
+                        raise   # a lone request outgrew the pool: fatal
+                    self._preempt(victim)
+                    preempted.append(victim)
+                    if victim is s:     # s itself was youngest: stop growing
+                        break
+        return preempted
+
+    def _preempt(self, victim: RequestState) -> None:
+        self._release(victim)
+        victim.reset_for_preemption()
+        self.waiting.appendleft(victim)       # FCFS: retry before newer work
+
+    def admit(self) -> list[RequestState]:
+        """Admit waiting requests while a slot + prefix-sized pool room exist."""
+        admitted = []
+        while self.waiting and self._free_slots:
+            cand = self.waiting[0]
+            need = self.cache.blocks_for(cand.seq_len + 1)
+            if self.cache.allocator.num_free < need:
+                break
+            self.waiting.popleft()
+            cand.slot = self._free_slots.pop()
+            self.cache.ensure(cand.slot, cand.seq_len + 1)
+            self.running.append(cand)
+            admitted.append(cand)
+        return admitted
+
+    def schedule(self) -> Sequence[RequestState]:
+        """One scheduling round; returns the running set for this step."""
+        self.retire_finished()
+        self.grow_or_preempt()
+        self.admit()
+        return self.running

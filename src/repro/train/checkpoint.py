@@ -23,18 +23,47 @@ from typing import Any
 
 import msgpack
 import numpy as np
-import zstandard
+
+try:                                   # optional: fall back to stdlib zlib
+    import zstandard
+except ImportError:                    # pragma: no cover - env dependent
+    zstandard = None
 
 import jax
 import jax.numpy as jnp
 from jax import tree_util as jtu
 
+from repro.core.graph import keystr
+
 _MAGIC = b"SPA1"
+_CODEC_ZSTD = b"Z"
+_CODEC_ZLIB = b"D"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return _CODEC_ZSTD + zstandard.ZstdCompressor(level=3).compress(raw)
+    return _CODEC_ZLIB + zlib.compress(raw, level=3)
+
+
+def _decompress(blob: bytes) -> bytes:
+    codec, payload = blob[:1], blob[1:]
+    if codec == _CODEC_ZSTD:
+        if zstandard is None:
+            raise CheckpointError(
+                "checkpoint is zstd-compressed but zstandard is not installed")
+        return zstandard.ZstdDecompressor().decompress(payload)
+    if codec == _CODEC_ZLIB:
+        return zlib.decompress(payload)
+    # legacy blobs (pre-codec-byte) are zstd with no prefix
+    if zstandard is not None:
+        return zstandard.ZstdDecompressor().decompress(blob)
+    raise CheckpointError("unknown checkpoint codec")
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat, _ = jtu.tree_flatten_with_path(tree)
-    return {jtu.keystr(p, simple=True, separator="."): np.asarray(l)
+    return {keystr(p): np.asarray(l)
             for p, l in flat}
 
 
@@ -51,7 +80,7 @@ def save_checkpoint(path: str, step: int, tree: Any,
         },
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    comp = _compress(raw)
     blob = _MAGIC + zlib.crc32(comp).to_bytes(4, "big") + comp
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -76,7 +105,7 @@ def load_raw(path: str) -> dict:
     comp = blob[8:]
     if zlib.crc32(comp) != crc:
         raise CheckpointError(f"{path}: checksum mismatch")
-    raw = zstandard.ZstdDecompressor().decompress(comp)
+    raw = _decompress(comp)
     return msgpack.unpackb(raw, raw=False)
 
 
@@ -98,7 +127,7 @@ def load_checkpoint(path: str, template: Any, shardings: Any = None
         sh_flat = jtu.tree_leaves(
             shardings, is_leaf=lambda x: x is None or hasattr(x, "spec"))
     for i, (p, tmpl) in enumerate(flat):
-        key = jtu.keystr(p, simple=True, separator=".")
+        key = keystr(p)
         if key not in arrays:
             missing.append(key)
             leaves.append(tmpl)
@@ -111,7 +140,7 @@ def load_checkpoint(path: str, template: Any, shardings: Any = None
         if sh_flat is not None and sh_flat[i] is not None:
             val = jax.device_put(val, sh_flat[i])
         leaves.append(val)
-    extra = set(arrays) - {jtu.keystr(p, simple=True, separator=".")
+    extra = set(arrays) - {keystr(p)
                            for p, _ in flat}
     meta = dict(payload["meta"], missing=missing, extra=sorted(extra))
     return payload["step"], jtu.tree_unflatten(treedef, leaves), meta

@@ -10,6 +10,9 @@ Random residual-MLP programs are generated, then we assert:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import trace_graph

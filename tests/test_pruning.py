@@ -80,8 +80,9 @@ def test_zero_channel_invariance(key):
     # zeroing the first half of units in every mlp group
     from repro.core.pruner import delete_positions, apply_pruning
     from jax import tree_util as jtu
+    from repro.core.graph import keystr
     flat, treedef = jtu.tree_flatten_with_path(ap)
-    paths = [jtu.keystr(p, simple=True, separator=".") for p, _ in flat]
+    paths = [keystr(p) for p, _ in flat]
     leaves = {p: np.asarray(l).copy() for p, l in
               zip(paths, [l for _, l in flat])}
     pruned = {}
