@@ -6,8 +6,17 @@ more tokens/sec out of it — no masking, no special kernels, just fewer
 FLOPs per step.  Sweeps prune ratios on a serving-scale reduced config
 (large enough that per-step compute, not dispatch overhead, dominates).
 
-Also reports engine vs sequential-generate() speedup at batch: continuous
-batching amortizes one jitted step over every in-flight request.
+Also reports engine vs sequential-generate() speedup at batch (continuous
+batching amortizes one jitted step over every in-flight request), plus the
+prefill-subsystem numbers this PR's acceptance hangs on:
+
+  - time-to-first-token on a 256-token prompt, chunked prefill vs the
+    token-by-token warmup (asserted >= 3x faster, outputs byte-identical
+    to the sequential decode oracle);
+  - a 10-request shared-prefix batch vs 10 independent requests: prefix
+    caching must allocate strictly fewer pool blocks, again with
+    oracle-identical outputs — including under recompute preemption of a
+    prefix-sharing request.
 
   PYTHONPATH=src python -m benchmarks.serving
   PYTHONPATH=src python -m benchmarks.run --only serving
@@ -110,6 +119,102 @@ def _sequential_tps(model, params, prompts) -> float:
     return n_new / (time.time() - t0)
 
 
+def _oracle(model, params, prompts, gen):
+    """Sequential greedy decode oracle tokens per prompt (equal lengths)."""
+    import jax.numpy as jnp
+
+    from repro.launch.serve import generate
+    arr = jnp.asarray(np.asarray(prompts, np.int32))
+    out = np.asarray(generate(model, params, arr, gen))
+    P = arr.shape[1]
+    return [list(out[i, P:]) for i in range(len(prompts))]
+
+
+def _ttft_rows(model, params) -> list[str]:
+    """Chunked prefill vs token-by-token warmup on a 256-token prompt."""
+    rng = np.random.default_rng(1)
+    P, GEN, CHUNK = 256, 8, 64
+    prompt = [int(t) for t in rng.integers(0, 4096, P)]
+    ref = _oracle(model, params, [prompt], GEN)[0]
+
+    ttft = {}
+    for name, chunk in (("tokenwise", 0), ("chunked", CHUNK)):
+        eng = Engine(model, params, ServeConfig(
+            max_seqs=4, block_size=16, max_len=P + GEN, chunk_size=chunk))
+        eng.add_request(prompt, max_new_tokens=GEN)
+        eng.run()                                   # compile
+        best = float("inf")
+        for _ in range(3):
+            eng.reset()
+            rid = eng.add_request(prompt, max_new_tokens=GEN)
+            out, stats = eng.run()
+            assert out[rid].tokens == ref, \
+                f"{name} prefill diverged from the sequential oracle"
+            best = min(best, stats["mean_ttft_s"])
+        ttft[name] = best
+
+    speedup = ttft["tokenwise"] / max(ttft["chunked"], 1e-9)
+    assert speedup >= 3.0, \
+        f"chunked-prefill TTFT speedup {speedup:.2f}x < 3x"
+    return [
+        f"serving_ttft_tokenwise,{ttft['tokenwise'] * 1e6:.0f},"
+        f"{ttft['tokenwise'] * 1e3:.1f}ms to first token (P={P})",
+        f"serving_ttft_chunked,{ttft['chunked'] * 1e6:.0f},"
+        f"{ttft['chunked'] * 1e3:.1f}ms to first token (P={P} chunk={CHUNK}) "
+        f"speedup={speedup:.2f}x",
+    ]
+
+
+def _prefix_rows(model, params) -> list[str]:
+    """10 shared-prefix requests vs 10 independent ones: block accounting
+    + oracle parity, with and without pool pressure (preemption)."""
+    rng = np.random.default_rng(2)
+    N, PRE, SUF, GEN = 10, 192, 8, 8
+    common = [int(t) for t in rng.integers(0, 4096, PRE)]
+    shared = [common + [int(t) for t in rng.integers(0, 4096, SUF)]
+              for _ in range(N)]
+    indep = [[int(t) for t in rng.integers(0, 4096, PRE + SUF)]
+             for _ in range(N)]
+
+    def serve(prompts, gen=GEN, num_blocks=0):
+        eng = Engine(model, params, ServeConfig(
+            max_seqs=4, block_size=16, max_len=PRE + SUF + gen,
+            chunk_size=64, num_blocks=num_blocks))
+        rids = [eng.add_request(p, max_new_tokens=gen) for p in prompts]
+        out, _ = eng.run()
+        ref = _oracle(model, params, prompts, gen)
+        for r, want in zip(rids, ref):
+            assert out[r].tokens == want, \
+                "engine diverged from the sequential oracle"
+        alloc = eng.cache_host.allocator
+        preempts = sum(out[r].preemptions for r in rids)
+        return alloc.total_allocated, alloc.peak_live, preempts
+
+    blocks_shared, peak_shared, _ = serve(shared)
+    blocks_indep, peak_indep, _ = serve(indep)
+    assert blocks_shared < blocks_indep, \
+        (blocks_shared, blocks_indep, "prefix caching failed to share")
+
+    # a longer generation outgrows the blocks reserved at admission, and a
+    # pool below the working set turns that growth into recompute
+    # preemption of prefix-sharing requests — outputs must still match the
+    # oracle token-for-token
+    _, _, preempts = serve(shared, gen=32, num_blocks=18)
+    assert preempts > 0, "pressure pool did not trigger preemption"
+
+    return [
+        f"serving_prefix_shared,{blocks_shared},"
+        f"{blocks_shared} blocks allocated / peak {peak_shared} "
+        f"({N} reqs, {PRE}-tok shared prefix)",
+        f"serving_prefix_independent,{blocks_indep},"
+        f"{blocks_indep} blocks allocated / peak {peak_indep} "
+        f"({N} independent reqs) saving="
+        f"{1 - blocks_shared / blocks_indep:.0%}",
+        f"serving_prefix_preempted,{preempts},"
+        f"oracle-identical under preemption ({preempts} preemptions)",
+    ]
+
+
 def run() -> list[str]:
     rng = np.random.default_rng(0)
     cfg = bench_cfg()
@@ -144,6 +249,9 @@ def run() -> list[str]:
             f"serving_{key},{1e6 / max(t, 1e-9):.1f},"
             f"{t:.1f} tok/s params={pruned_cfgs[key].param_count()} "
             f"speedup={t / max(tps_dense, 1e-9):.2f}x")
+
+    rows.extend(_ttft_rows(model, params))
+    rows.extend(_prefix_rows(model, params))
     return rows
 
 

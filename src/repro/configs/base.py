@@ -187,12 +187,20 @@ SHAPES: dict[str, ShapeConfig] = {
     "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
     "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
     "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+    # serving-engine steps (repro.serve): block-pool cache + block tables;
+    # for paged_prefill seq_len is the prefill *chunk* length per slot
+    "paged_decode_32k": ShapeConfig("paged_decode_32k", 32_768, 128,
+                                    "paged_decode"),
+    "paged_prefill_512": ShapeConfig("paged_prefill_512", 512, 8,
+                                     "paged_prefill"),
 }
+
+DECODE_KINDS = ("decode", "paged_decode", "paged_prefill")
 
 
 def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
     """Is (arch x shape) a runnable dry-run cell?  Returns (ok, reason)."""
-    if shape.kind == "decode" and not cfg.has_decode:
+    if shape.kind in DECODE_KINDS and not cfg.has_decode:
         return False, "encoder-only arch has no decode step"
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, "pure full-attention arch cannot serve 500k ctx (see DESIGN.md)"

@@ -1,4 +1,7 @@
-from repro.kernels.paged_attention.ops import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_reference
+from repro.kernels.paged_attention.ops import (paged_attention,
+                                               paged_prefill_attention)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_reference, paged_prefill_attention_reference)
 
-__all__ = ["paged_attention", "paged_attention_reference"]
+__all__ = ["paged_attention", "paged_attention_reference",
+           "paged_prefill_attention", "paged_prefill_attention_reference"]

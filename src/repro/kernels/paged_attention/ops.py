@@ -1,16 +1,23 @@
-"""Dispatch for paged decode attention: Pallas kernel vs jnp reference.
+"""Dispatch for paged attention: Pallas kernel vs jnp reference.
 
 The kernel requires a *static* python-int window (mask folded into the
 kernel at trace time); a per-sequence dynamic window (Hymba hybrid layers,
 where the window is data under ``lax.scan``) falls back to the reference
 path, which takes window as an array.
+
+``return_visits`` exposes the kernel's per-(seq, kv-head) block-visit
+counter (the fully-masked-block skip's observable); it is kernel-only —
+the reference materializes every table entry by construction, so asking
+it for visit counts is a bug.
 """
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.paged_attention.paged_attention import paged_attention_kernel
-from repro.kernels.paged_attention.ref import paged_attention_reference
+from repro.kernels.paged_attention.paged_attention import (
+    paged_attention_kernel, paged_prefill_attention_kernel)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_reference, paged_prefill_attention_reference)
 
 
 def _on_tpu() -> bool:
@@ -19,14 +26,39 @@ def _on_tpu() -> bool:
 
 def paged_attention(q, k_pool, v_pool, block_tables, kv_lens, *,
                     window=0, scale: float | None = None,
-                    use_kernel: bool = True, interpret: bool | None = None):
-    """q (B, H, D); pools (P, bs, KH, D/DV) -> (B, H, DV)."""
+                    use_kernel: bool = True, interpret: bool | None = None,
+                    return_visits: bool = False):
+    """Decode: q (B, H, D); pools (P, bs, KH, D/DV) -> (B, H, DV)."""
     if use_kernel and isinstance(window, int):
         if interpret is None:
             interpret = not _on_tpu()
         return paged_attention_kernel(
             q, k_pool, v_pool, block_tables, kv_lens,
-            window=window, scale=scale, interpret=interpret)
+            window=window, scale=scale, interpret=interpret,
+            return_visits=return_visits)
+    if return_visits:
+        raise ValueError("visit counts are a kernel-path observable")
     return paged_attention_reference(
         q, k_pool, v_pool, block_tables, kv_lens,
+        window=window, scale=scale)
+
+
+def paged_prefill_attention(q, k_pool, v_pool, block_tables, q_starts,
+                            kv_lens, *, window=0,
+                            scale: float | None = None,
+                            use_kernel: bool = True,
+                            interpret: bool | None = None,
+                            return_visits: bool = False):
+    """Chunked prefill: q (B, C, H, D) -> (B, C, H, DV)."""
+    if use_kernel and isinstance(window, int):
+        if interpret is None:
+            interpret = not _on_tpu()
+        return paged_prefill_attention_kernel(
+            q, k_pool, v_pool, block_tables, q_starts, kv_lens,
+            window=window, scale=scale, interpret=interpret,
+            return_visits=return_visits)
+    if return_visits:
+        raise ValueError("visit counts are a kernel-path observable")
+    return paged_prefill_attention_reference(
+        q, k_pool, v_pool, block_tables, q_starts, kv_lens,
         window=window, scale=scale)

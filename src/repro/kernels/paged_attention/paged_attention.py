@@ -1,17 +1,30 @@
-"""Pallas TPU paged decode attention over a block-table-indexed KV pool.
+"""Pallas TPU paged attention over a block-table-indexed KV pool.
 
-Grid (B, KH, NB); the block dimension is innermost so the f32 online-softmax
-accumulators (acc, running max m, running sum l) persist in VMEM scratch
-across the KV blocks of one (seq, kv-head) pair.  The block table and the
-per-sequence lengths ride in as *scalar prefetch* operands
-(``pltpu.PrefetchScalarGridSpec``): the K/V BlockSpec index maps read
-``tables[b, j]`` to DMA the j-th logical block of sequence b from wherever
-it lives in the pool — the gathered (B, S, KH, D) history is never
-materialized, which is the whole point of paging.
+One kernel serves decode (one query token per sequence) and chunked
+prefill (C query tokens per sequence): queries ride in as a (C*G, D) tile
+per (seq, kv-head) pair, and each query row r masks against its absolute
+position ``q_start + r // G`` — prefill-aware causal masking inside the
+online-softmax loop.
+
+Grid (B, KH, NB); the block dimension is innermost so the f32
+online-softmax accumulators (acc, running max m, running sum l) persist in
+VMEM scratch across the KV blocks of one (seq, kv-head) pair.  The block
+table, per-sequence lengths and query start positions ride in as *scalar
+prefetch* operands (``pltpu.PrefetchScalarGridSpec``): the K/V BlockSpec
+index maps read ``tables[b, j]`` to DMA the j-th logical block of sequence
+b from wherever it lives in the pool — the gathered (B, S, KH, D) history
+is never materialized, which is the whole point of paging.
+
+Fully-masked blocks are skipped: table entries past a sequence's length
+(``j * block_size >= kv_len``) and, under a sliding window, blocks wholly
+left of every query's window are neither computed nor (for the length
+case) DMA'd — their BlockSpec index degrades to the null block 0.  A
+per-(seq, kv-head) visit counter is emitted alongside the output so tests
+can assert the skip actually fires (tests/test_serve.py).
 
 GQA is handled as in ``flash_attention``: one grid step processes the G
-query heads of a KV head as a (G, D) tile, so K/V blocks are read once per
-KV head, not once per query head.
+query heads of a KV head as part of the (C*G, D) tile, so K/V blocks are
+read once per KV head, not once per query head.
 """
 from __future__ import annotations
 
@@ -25,9 +38,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(lens_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, scale: float, window: int,
-            block_size: int):
+def _kernel(lens_ref, starts_ref, tables_ref, q_ref, k_ref, v_ref,
+            o_ref, visits_ref, acc_ref, m_ref, l_ref, cnt_ref, *,
+            scale: float, window: int, block_size: int, group: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
     nb = pl.num_programs(2)
@@ -37,75 +50,129 @@ def _kernel(lens_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
-
-    q = q_ref[0, 0].astype(jnp.float32)                   # (G, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)                # (bs, D)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+        cnt_ref[0, 0] = 0
 
     kv_len = lens_ref[b]
-    idx = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = idx < kv_len                                   # (G, bs)
+    q_start = starts_ref[b]
+    first = j * block_size
+    visited = first < kv_len
     if window:
-        mask &= idx > kv_len - 1 - window
-    s = jnp.where(mask, s, NEG_INF)
+        # wholly left of even the oldest query's window -> fully masked
+        visited &= first + block_size - 1 > q_start - window
 
-    m_prev = m_ref[...]                                   # (G, 1)
-    m_cur = jnp.max(s, axis=1, keepdims=True)
-    m_new = jnp.maximum(m_prev, m_cur)
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)                                # (G, bs)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-    m_ref[...] = m_new
+    @pl.when(visited)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)               # (CG, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)            # (bs, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
 
-    v = v_ref[0, :, 0].astype(jnp.float32)                # (bs, DV)
-    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    acc_ref[...] = acc_ref[...] * alpha + pv
+        idx = first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+            // group
+        mask = (idx <= qpos) & (idx < kv_len)             # (CG, bs)
+        if window:
+            mask &= idx > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # (CG, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                            # (CG, bs)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+
+        v = v_ref[0, :, 0].astype(jnp.float32)            # (bs, DV)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        cnt_ref[0, 0] += 1
 
     @pl.when(j == nb - 1)
     def _done():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        visits_ref[0, 0] = cnt_ref[0, 0]
+
+
+def _paged_attention(q, k_pool, v_pool, block_tables, q_starts, kv_lens, *,
+                     window: int, scale: float | None, interpret: bool):
+    """q (B, C, H, D); pools (P, bs, KH, D/DV); tables (B, NB);
+    q_starts/kv_lens (B,).  Returns (out (B, C, H, DV), visits (B, KH))."""
+    B, C, H, D = q.shape
+    bs, KH, DV = k_pool.shape[1], k_pool.shape[2], v_pool.shape[3]
+    NB = block_tables.shape[1]
+    G = H // KH
+    CG = C * G
+    scale = scale if scale is not None else D ** -0.5
+
+    # (B, C, KH, G, D) -> (B, KH, C*G, D): row r is query (r // G, r % G)
+    qg = q.reshape(B, C, KH, G, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, KH, CG, D)
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               block_size=bs, group=G)
+
+    def _kv_index(b, h, j, lens, starts, tables):
+        # skip the DMA for blocks past the sequence: read the null block
+        return (jnp.where(j * bs < lens[b], tables[b, j], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, KH, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, CG, D),
+                         lambda b, h, j, lens, starts, tables: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), _kv_index),
+            pl.BlockSpec((1, bs, 1, DV), _kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, CG, DV),
+                         lambda b, h, j, lens, starts, tables: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1),
+                         lambda b, h, j, lens, starts, tables: (b, h)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((CG, DV), jnp.float32),
+            pltpu.VMEM((CG, 1), jnp.float32),
+            pltpu.VMEM((CG, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.int32),
+        ],
+    )
+    out, visits = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, KH, CG, DV), q.dtype),
+                   jax.ShapeDtypeStruct((B, KH), jnp.int32)],
+        interpret=interpret,
+    )(kv_lens.astype(jnp.int32), q_starts.astype(jnp.int32),
+      block_tables.astype(jnp.int32), qg, k_pool, v_pool)
+    out = out.reshape(B, KH, C, G, DV).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, C, H, DV)
+    return out, visits
 
 
 def paged_attention_kernel(q, k_pool, v_pool, block_tables, kv_lens, *,
                            window: int = 0, scale: float | None = None,
-                           interpret: bool = True):
-    """q (B, H, D); pools (P, bs, KH, D/DV); tables (B, NB); lens (B,)."""
-    B, H, D = q.shape
-    bs, KH, DV = k_pool.shape[1], k_pool.shape[2], v_pool.shape[3]
-    NB = block_tables.shape[1]
-    G = H // KH
-    scale = scale if scale is not None else D ** -0.5
+                           interpret: bool = True,
+                           return_visits: bool = False):
+    """Decode entry point: q (B, H, D), one query token at ``kv_len - 1``."""
+    out, visits = _paged_attention(
+        q[:, None], k_pool, v_pool, block_tables, kv_lens - 1, kv_lens,
+        window=window, scale=scale, interpret=interpret)
+    out = out[:, 0]
+    return (out, visits) if return_visits else out
 
-    qg = q.reshape(B, KH, G, D)
-    kernel = functools.partial(_kernel, scale=scale, window=window,
-                               block_size=bs)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B, KH, NB),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D),
-                         lambda b, h, j, lens, tables: (b, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, j, lens, tables: (tables[b, j], 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, DV),
-                         lambda b, h, j, lens, tables: (tables[b, j], 0, h, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, DV),
-                               lambda b, h, j, lens, tables: (b, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((G, DV), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-        ],
-    )
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KH, G, DV), q.dtype),
-        interpret=interpret,
-    )(kv_lens.astype(jnp.int32), block_tables.astype(jnp.int32),
-      qg, k_pool, v_pool)
-    return out.reshape(B, H, DV)
+
+def paged_prefill_attention_kernel(q, k_pool, v_pool, block_tables,
+                                   q_starts, kv_lens, *, window: int = 0,
+                                   scale: float | None = None,
+                                   interpret: bool = True,
+                                   return_visits: bool = False):
+    """Prefill entry point: q (B, C, H, D), C query tokens starting at
+    ``q_starts``; ``kv_lens = q_starts + valid`` (rows past a sequence's
+    valid count produce garbage the caller discards)."""
+    out, visits = _paged_attention(
+        q, k_pool, v_pool, block_tables, q_starts, kv_lens,
+        window=window, scale=scale, interpret=interpret)
+    return (out, visits) if return_visits else out

@@ -23,6 +23,42 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def paged_prefill_attention_reference(q, k_pool, v_pool, block_tables,
+                                      q_starts, kv_lens, *, window=0,
+                                      scale: float | None = None
+                                      ) -> jax.Array:
+    """Chunked-prefill oracle: C query tokens per sequence at absolute
+    positions ``q_starts + arange(C)`` attend causally over the paged
+    history.  q (B, C, H, D); ``kv_lens = q_starts + valid``; rows past a
+    sequence's valid count produce garbage the caller discards.  Output
+    (B, C, H, DV)."""
+    B, C, H, D = q.shape
+    bs, KH = k_pool.shape[1], k_pool.shape[2]
+    NB = block_tables.shape[1]
+    G = H // KH
+    scale = scale if scale is not None else D ** -0.5
+
+    k = k_pool[block_tables].reshape(B, NB * bs, KH, -1)    # (B, S, KH, D)
+    v = v_pool[block_tables].reshape(B, NB * bs, KH, -1)
+
+    qg = q.reshape(B, C, KH, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    idx = jnp.arange(NB * bs, dtype=jnp.int32)[None, None, :]    # (1, 1, S)
+    qpos = (q_starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+            )[..., None]                                         # (B, C, 1)
+    valid = (idx <= qpos) & (idx < kv_lens[:, None, None])
+    win = jnp.asarray(window, jnp.int32)
+    if win.ndim == 0:
+        win = jnp.broadcast_to(win, (B,))
+    winb = win[:, None, None]
+    valid &= (winb <= 0) | (idx > qpos - winb)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)    # (B,KH,G,C,S)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, C, H, v.shape[-1]).astype(q.dtype)
+
+
 def paged_attention_reference(q, k_pool, v_pool, block_tables, kv_lens, *,
                               window=0, scale: float | None = None
                               ) -> jax.Array:

@@ -12,9 +12,13 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
 
 Each cell lowers the *production* step function:
-  train_4k     -> jit(train_step)   (fwd + bwd + AdamW, donated state)
-  prefill_32k  -> jit(prefill_step) (full-sequence forward to logits)
-  decode_*     -> jit(serve_step)   (one token through the KV/SSM cache)
+  train_4k        -> jit(train_step)   (fwd + bwd + AdamW, donated state)
+  prefill_32k     -> jit(prefill_step) (full-sequence forward to logits)
+  decode_*        -> jit(serve_step)   (one token through the KV/SSM cache)
+  paged_decode_*  -> jit(paged_decode_step)  (serving engine: block-pool
+                     cache + block tables + per-slot positions)
+  paged_prefill_* -> jit(paged_prefill_step) (serving engine: one chunked
+                     prefill chunk per slot into the block pool)
 """
 import argparse
 import json
@@ -124,6 +128,42 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             lowered = jax.jit(
                 prefill_step, in_shardings=(params_sh, batch_sh),
             ).lower(params_sds, batch_sds)
+        elif shape.kind in ("paged_decode", "paged_prefill"):
+            # serving-engine steps over the paged block pool (DESIGN.md §8)
+            block_size = 64
+            if shape.kind == "paged_decode":
+                spec = model.paged_decode_input_spec(shape, block_size)
+            else:
+                spec = model.paged_prefill_input_spec(shape, block_size)
+            cache_sh = shardings_for(mesh, rules, model.paged_cache_axes(),
+                                     spec["cache"])
+            batch_sh = {
+                k: NamedSharding(mesh, rules.spec(
+                    ("batch",) + (None,) * (len(v.shape) - 1), shape=v.shape))
+                for k, v in spec.items() if k != "cache"}
+
+            if shape.kind == "paged_decode":
+                def paged_step(params, cache, tokens, positions,
+                               block_tables, active):
+                    return model.paged_decode_step(
+                        params, cache, tokens, positions, block_tables,
+                        active)
+                order = ("tokens", "positions", "block_tables", "active")
+            else:
+                def paged_step(params, cache, tokens, positions, slots,
+                               block_tables, valid):
+                    return model.paged_prefill_step(
+                        params, cache, tokens, positions, slots,
+                        block_tables, valid)
+                order = ("tokens", "positions", "slots", "block_tables",
+                         "valid")
+            lowered = jax.jit(
+                paged_step,
+                in_shardings=(params_sh, cache_sh)
+                + tuple(batch_sh[k] for k in order),
+                donate_argnums=(1,),
+            ).lower(params_sds, spec["cache"],
+                    *(spec[k] for k in order))
         else:                                   # decode
             dec = model.decode_input_spec(shape)
             cache_sh = shardings_for(

@@ -57,7 +57,7 @@ def arch_rules(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig,
         ov["seq_q"] = ("model",)
     if cfg.n_kv_heads and cfg.n_kv_heads % msize != 0:
         ov["kv_heads"] = ()
-        if shape.kind == "decode":
+        if shape.kind == "decode":        # paged pools have no kv_seq axis
             # KV heads can't use the model axis -> shard the cache sequence
             # over it instead (sequence-split decode attention); otherwise a
             # 32k cache replicates 16x per device.

@@ -6,7 +6,14 @@ unchanged, it just compiles to fewer FLOPs (see DESIGN.md §8).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --requests 16 --prompt-len 32 --gen 32 \
-      --max-seqs 8 --block-size 16 [--prune-ratio 0.5] [--temperature 0.8]
+      --max-seqs 8 --block-size 16 --chunk-size 32 --prefill-budget 64 \
+      [--no-prefix-caching] [--prune-ratio 0.5] [--temperature 0.8]
+
+Prefill is chunked through ``paged_prefill_step`` (``--chunk-size`` tokens
+per step per slot, ``--prefill-budget`` tokens per step across slots;
+``--chunk-size 0`` restores token-by-token prefill), and requests sharing
+a prompt prefix alias full KV blocks via refcounted prefix caching unless
+``--no-prefix-caching``.
 
 ``generate`` (sequential, token-by-token) is kept as the correctness
 oracle the engine is tested against (tests/test_serve.py).
@@ -50,7 +57,9 @@ def build_engine(cfg, model, params, args):
     return Engine(model, params, ServeConfig(
         max_seqs=args.max_seqs, block_size=args.block_size,
         max_len=args.max_len or (args.prompt_len + args.gen),
-        num_blocks=args.num_blocks, seed=args.seed))
+        num_blocks=args.num_blocks, seed=args.seed,
+        chunk_size=args.chunk_size, prefill_budget=args.prefill_budget,
+        prefix_caching=not args.no_prefix_caching))
 
 
 def main():
@@ -65,6 +74,12 @@ def main():
     ap.add_argument("--max-len", type=int, default=0)
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="KV pool blocks (0 = worst-case sized)")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="prefill chunk tokens (0 = token-by-token)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="max prefill tokens per engine step (0 = no cap)")
+    ap.add_argument("--no-prefix-caching", action="store_true",
+                    help="disable shared-prefix block aliasing")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--prune-ratio", type=float, default=0.0)
@@ -112,7 +127,9 @@ def main():
           f"(incl. compile)")
     print(f"decode {stats['decode_tok_per_s']:.1f} tok/s | "
           f"prefill+decode {stats['total_tok_per_s']:.1f} tok/s | "
-          f"{stats['steps']:.0f} steps")
+          f"{stats['steps']:.0f} steps | "
+          f"{stats['prefill_chunks']:.0f} prefill chunks | "
+          f"mean ttft {stats['mean_ttft_s'] * 1e3:.1f}ms")
     first = out[min(out)]
     print("sample token ids:", first.tokens[:16])
 

@@ -69,9 +69,17 @@ class Model:
         return tf.init_paged_cache(self.cfg, num_blocks, block_size, max_seqs)
 
     def paged_decode_step(self, params, cache, tokens, positions,
-                          block_tables):
+                          block_tables, active=None):
         return tf.paged_decode_step(params, self.cfg, cache, tokens,
-                                    positions, block_tables)
+                                    positions, block_tables, active)
+
+    def paged_prefill_step(self, params, cache, tokens, positions, slots,
+                           block_tables, valid):
+        return tf.paged_prefill_step(params, self.cfg, cache, tokens,
+                                     positions, slots, block_tables, valid)
+
+    def paged_cache_axes(self) -> dict:
+        return tf.paged_cache_axes(self.cfg)
 
     # ----- shapes -----
     def batch_spec(self, shape: ShapeConfig, with_targets: bool) -> dict:
@@ -121,6 +129,55 @@ class Model:
             "cache": self.cache_spec(shape),
             "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
             "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def paged_cache_spec(self, shape: ShapeConfig, block_size: int) -> dict:
+        """Pool-shaped cache SDS: worst-case blocks for (batch, seq_len)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        dt = dtype_of(cfg.dtype)
+        L = cfg.num_layers
+        num_blocks = B * (-(-S // block_size)) + 1
+        sds = jax.ShapeDtypeStruct
+        spec: dict[str, Any] = {}
+        if cfg.family != "ssm":
+            KH = cfg.n_kv_heads
+            spec["k"] = sds((L, num_blocks, block_size, KH, cfg.head_dim_), dt)
+            spec["v"] = sds((L, num_blocks, block_size, KH, cfg.v_head_dim_),
+                            dt)
+        if cfg.family == "ssm" or cfg.hybrid:
+            nh, hp, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+            conv_ch = nh * hp + 2 * n
+            spec["conv"] = sds((L, B, cfg.ssm_conv - 1, conv_ch), dt)
+            spec["state"] = sds((L, B, nh, hp, n), jnp.float32)
+        return spec
+
+    def paged_decode_input_spec(self, shape: ShapeConfig,
+                                block_size: int = 64) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        nb = -(-S // block_size)
+        sds = jax.ShapeDtypeStruct
+        return {
+            "cache": self.paged_cache_spec(shape, block_size),
+            "tokens": sds((B,), jnp.int32),
+            "positions": sds((B,), jnp.int32),
+            "block_tables": sds((B, nb), jnp.int32),
+            "active": sds((B,), jnp.bool_),
+        }
+
+    def paged_prefill_input_spec(self, shape: ShapeConfig,
+                                 block_size: int = 64) -> dict:
+        """shape.seq_len doubles as the prefill chunk length here."""
+        B, C = shape.global_batch, shape.seq_len
+        nb = -(-C // block_size)
+        sds = jax.ShapeDtypeStruct
+        return {
+            "cache": self.paged_cache_spec(shape, block_size),
+            "tokens": sds((B, C), jnp.int32),
+            "positions": sds((B, C), jnp.int32),
+            "slots": sds((B,), jnp.int32),
+            "block_tables": sds((B, nb), jnp.int32),
+            "valid": sds((B,), jnp.int32),
         }
 
     # ----- concrete dummy data (smoke tests) -----

@@ -192,6 +192,44 @@ def attention_paged_decode(params: dict, cfg, x: jax.Array,
     return out, k_pool, v_pool
 
 
+def attention_paged_prefill(params: dict, cfg, x: jax.Array,
+                            positions: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_tables: jax.Array,
+                            valid: jax.Array, window=0
+                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-prefill attention over the paged KV pool.
+
+    x (B, C, d) — a fixed-size chunk of known tokens per sequence, right-
+    padded; positions (B, C) absolute write indices (``chunk_start +
+    arange(C)``); valid (B,) real-token counts.  K/V of the valid tokens
+    are scattered into the pool blocks their positions map to (padding
+    scatters into the reserved null block 0), then the chunk's queries
+    attend causally over the *pool* history — which includes any prefix
+    blocks aliased in by prefix caching.  window as in
+    ``attention_paged_decode``.  Returns (out (B, C, d), new pools).
+    """
+    from repro.kernels.paged_attention import paged_prefill_attention
+
+    B, C, _ = x.shape
+    bs, NB = k_pool.shape[1], block_tables.shape[1]
+    q, k_new, v_new = _qkv(params, cfg, x, positions)
+    inchunk = jnp.arange(C)[None, :] < valid[:, None]
+    # padded positions may point past the table; clip before the gather
+    # (their writes are redirected to the null block anyway)
+    blk_idx = jnp.clip(positions // bs, 0, NB - 1)
+    blk = jnp.where(inchunk, jnp.take_along_axis(block_tables, blk_idx,
+                                                 axis=1), 0)
+    off = jnp.where(inchunk, positions % bs, 0)
+    k_pool = k_pool.at[blk, off].set(k_new)
+    v_pool = v_pool.at[blk, off].set(v_new)
+    qf = q.reshape(B, C, q.shape[2] * q.shape[3], q.shape[4])
+    o = paged_prefill_attention(
+        qf, k_pool, v_pool, block_tables, positions[:, 0],
+        positions[:, 0] + valid, window=window, use_kernel=cfg.use_pallas)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return out, k_pool, v_pool
+
+
 def attention_flops(cfg, batch: int, seq: int, causal: bool = True) -> int:
     """Analytic attention matmul FLOPs (for MODEL_FLOPS accounting)."""
     H, hd = cfg.n_heads, cfg.head_dim_

@@ -201,6 +201,50 @@ def init_ssm_cache(cfg, batch: int, dtype) -> SSMCache:
         jnp.zeros((batch, nh, hp, n), jnp.float32))
 
 
+def ssm_prefill(params: dict, cfg, x: jax.Array, cache: SSMCache,
+                valid: jax.Array) -> tuple[jax.Array, SSMCache]:
+    """Chunked prefill: advance the recurrent state by ``valid`` tokens.
+
+    x (B, C, d) — a fixed-size chunk, right-padded; valid (B,) int32 counts
+    the real tokens.  Padded positions are neutralized by forcing dt = 0
+    there (decay exp(0·A) = 1, zero input), so the state after the scan is
+    *exactly* the state after the valid prefix.  The conv window continues
+    from ``cache.conv`` (the last K-1 inputs of the previous chunk) and the
+    SSD scan from ``cache.state``.  Returns (y (B, C, d), new cache) — y at
+    padded positions is garbage the caller discards.
+    """
+    B_, C, _ = x.shape
+    nh, hp = params["w_x"].shape[1], params["w_x"].shape[2]
+    n = params["w_B"].shape[1]
+    K = params["conv_w"].shape[0]
+    z, xin, Bv, Cv, dt = _project(params, cfg, x)
+
+    conv_in = jnp.concatenate([xin.reshape(B_, C, nh * hp), Bv, Cv], axis=-1)
+    win = jnp.concatenate([cache.conv.astype(conv_in.dtype), conv_in], axis=1)
+    conv_out = jax.lax.conv_general_dilated(
+        win, params["conv_w"][:, None, :], window_strides=(1,),
+        padding="VALID", dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=win.shape[-1])
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    # next chunk's left context: the last K-1 *valid* rows of the window
+    new_conv = jax.vmap(
+        lambda w, s: jax.lax.dynamic_slice_in_dim(w, s, K - 1, axis=0)
+    )(win, valid)
+
+    xin = conv_out[..., :nh * hp].reshape(B_, C, nh, hp)
+    Bv = conv_out[..., nh * hp:nh * hp + n]
+    Cv = conv_out[..., nh * hp + n:]
+
+    dt = jnp.where(jnp.arange(C)[None, :, None] < valid[:, None, None],
+                   dt, 0.0)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xdt = xin.astype(jnp.float32) * dt[..., None]
+    y, state = ssd_reference(xdt, dt, A, Bv, Cv, chunk=C,
+                             init_state=cache.state)
+    out = _finish(params, cfg, y, z, xin)
+    return out, SSMCache(new_conv, state)
+
+
 def ssm_decode(params: dict, cfg, x: jax.Array, cache: SSMCache
                ) -> tuple[jax.Array, SSMCache]:
     """Single-token recurrent step.  x (B,1,d)."""

@@ -309,26 +309,41 @@ def cache_axes(cfg: ArchConfig, long_context: bool = False) -> dict:
     return axes
 
 
+def paged_cache_axes(cfg: ArchConfig) -> dict:
+    """Logical axes of the paged-pool cache pytree (dry-run sharding).
+    The block axis stays replicated — pool blocks are an addressing
+    structure, not a data-parallel one; KV shards over kv_heads and the
+    per-slot SSM state over the slot (batch) axis."""
+    axes: dict[str, Any] = {}
+    if cfg.family != "ssm":
+        axes["k"] = ("layers", None, None, "kv_heads", None)
+        axes["v"] = ("layers", None, None, "kv_heads", None)
+    if cfg.family == "ssm" or cfg.hybrid:
+        axes["conv"] = ("layers", "batch", None, None)
+        axes["state"] = ("layers", "batch", "ssm_heads", None, None)
+    return axes
+
+
 def _decode_layer(lp: dict, lc: dict, flag, h: jax.Array, cfg: ArchConfig,
-                  attn_fn, ssm_cache_fn) -> tuple[jax.Array, dict]:
-    """One decode layer, shared by the contiguous and paged cache paths.
+                  attn_fn, ssm_fn) -> tuple[jax.Array, dict]:
+    """One incremental layer, shared by the contiguous decode, paged decode
+    and chunked paged-prefill paths.
 
     ``attn_fn(attn_params, hn, lc, flag) -> (a_out, kv_out_cache)`` and
-    ``ssm_cache_fn(lc) -> SSMCache`` encapsulate everything the two cache
-    layouts disagree on; the residual/FFN scaffolding stays single-source.
+    ``ssm_fn(ssm_params, hn, lc) -> (delta, SSMCache)`` encapsulate
+    everything the cache layouts / step widths disagree on; the
+    residual/FFN scaffolding stays single-source.
     """
     out_cache: dict[str, Any] = {}
     hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
     if cfg.family == "ssm":
-        delta, new_sc = ssm_mod.ssm_decode(lp["ssm"], cfg, hn,
-                                           ssm_cache_fn(lc))
+        delta, new_sc = ssm_fn(lp["ssm"], hn, lc)
         h = h + delta
         out_cache["conv"], out_cache["state"] = new_sc.conv, new_sc.state
         return h, out_cache
     a_out, kv_out = attn_fn(lp["attn"], hn, lc, flag)
     if cfg.hybrid:
-        s_out, new_sc = ssm_mod.ssm_decode(lp["ssm"], cfg, hn,
-                                           ssm_cache_fn(lc))
+        s_out, new_sc = ssm_fn(lp["ssm"], hn, lc)
         h = h + a_out + s_out
         out_cache["conv"], out_cache["state"] = new_sc.conv, new_sc.state
     else:
@@ -345,14 +360,16 @@ def _decode_layer(lp: dict, lc: dict, flag, h: jax.Array, cfg: ArchConfig,
 
 
 def _run_decode_layers(params: dict, cfg: ArchConfig, cache: dict,
-                       x: jax.Array, attn_fn, ssm_cache_fn
+                       x: jax.Array, attn_fn, ssm_fn
                        ) -> tuple[jax.Array, dict]:
-    """Scan/unrolled layer loop + logits epilogue shared by both paths."""
+    """Scan/unrolled layer loop + final norm shared by the incremental
+    paths.  Returns (hidden (B, S, d), new cache); callers project the
+    position(s) they need to logits."""
     flags = _is_global_flags(cfg)
 
     def body(carry, xs):
         lp, lc, flag = xs
-        return _decode_layer(lp, lc, flag, carry, cfg, attn_fn, ssm_cache_fn)
+        return _decode_layer(lp, lc, flag, carry, cfg, attn_fn, ssm_fn)
 
     if cfg.use_scan:
         h, new_cache = jax.lax.scan(body, x, (params["layers"], cache, flags))
@@ -365,9 +382,7 @@ def _run_decode_layers(params: dict, cfg: ArchConfig, cache: dict,
             h, oc = body(h, (lp, lc, flags[i]))
             per_layer_caches.append(oc)
         new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer_caches)
-    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    logits = logits_from_hidden(params, cfg, h)[:, 0]
-    return logits, new_cache
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), new_cache
 
 
 def decode_step(params: dict, cfg: ArchConfig, cache: dict,
@@ -390,10 +405,12 @@ def decode_step(params: dict, cfg: ArchConfig, cache: dict,
                 ap, cfg, hn, pos, kvc, "causal")
         return a_out, {"k": new_kv.k, "v": new_kv.v}
 
-    def ssm_cache_fn(lc):
-        return ssm_mod.SSMCache(lc["conv"], lc["state"])
+    def ssm_fn(sp, hn, lc):
+        return ssm_mod.ssm_decode(sp, cfg, hn,
+                                  ssm_mod.SSMCache(lc["conv"], lc["state"]))
 
-    return _run_decode_layers(params, cfg, cache, x, attn_fn, ssm_cache_fn)
+    h, new_cache = _run_decode_layers(params, cfg, cache, x, attn_fn, ssm_fn)
+    return logits_from_hidden(params, cfg, h)[:, 0], new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -427,12 +444,19 @@ def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
 
 def paged_decode_step(params: dict, cfg: ArchConfig, cache: dict,
                       tokens: jax.Array, positions: jax.Array,
-                      block_tables: jax.Array) -> tuple[jax.Array, dict]:
+                      block_tables: jax.Array,
+                      active: jax.Array | None = None
+                      ) -> tuple[jax.Array, dict]:
     """One continuous-batching decode step.
 
     tokens (B,) int32; positions (B,) int32 per-slot write index (slots may
     be at different depths — this is what ``decode_step``'s scalar pos can't
-    express); block_tables (B, NB) int32.  Returns (logits (B, V), cache).
+    express); block_tables (B, NB) int32; active (B,) bool marks the slots
+    actually fed this step (None = all).  Inactive slots — idle, or mid
+    chunked-prefill and advancing through ``paged_prefill_step`` instead —
+    must keep their recurrent SSM/conv state untouched; their K/V writes
+    are already harmless because the engine hands them a zeroed table row
+    (everything lands in the null block).  Returns (logits (B, V), cache).
     """
     x = jnp.take(params["tok_embed"], tokens[:, None], axis=0)  # (B,1,d)
     B = tokens.shape[0]
@@ -453,12 +477,65 @@ def paged_decode_step(params: dict, cfg: ArchConfig, cache: dict,
             window=win)
         return a_out, {"k": kp, "v": vp}
 
-    def ssm_cache_fn(lc):
-        return ssm_mod.SSMCache(
+    def ssm_fn(sp, hn, lc):
+        sc = ssm_mod.SSMCache(
             jnp.where(fresh[:, None, None], 0, lc["conv"]),
             jnp.where(fresh[:, None, None, None], 0, lc["state"]))
+        return ssm_mod.ssm_decode(sp, cfg, hn, sc)
 
-    return _run_decode_layers(params, cfg, cache, x, attn_fn, ssm_cache_fn)
+    h, new_cache = _run_decode_layers(params, cfg, cache, x, attn_fn, ssm_fn)
+    if active is not None:
+        for name, nd in (("conv", 2), ("state", 3)):
+            if name in new_cache:
+                act = active.reshape((1, B) + (1,) * nd)
+                new_cache[name] = jnp.where(act, new_cache[name], cache[name])
+    return logits_from_hidden(params, cfg, h)[:, 0], new_cache
+
+
+def paged_prefill_step(params: dict, cfg: ArchConfig, cache: dict,
+                       tokens: jax.Array, positions: jax.Array,
+                       slots: jax.Array, block_tables: jax.Array,
+                       valid: jax.Array) -> tuple[jax.Array, dict]:
+    """Chunked prefill: push a fixed-size chunk of known tokens through the
+    layer stack, scattering K/V into the paged pool and advancing the
+    recurrent SSM state — O(P/chunk) engine steps for a P-token prompt
+    instead of the O(P) token-by-token warmup.
+
+    tokens (B, C) int32, right-padded; positions (B, C) absolute indices
+    (``num_cached + arange(C)``); slots (B,) int32 rows of the per-slot
+    SSM state tensors; block_tables (B, NB); valid (B,) real-token counts.
+    Returns (logits of each sequence's last valid token (B, V), cache) —
+    the engine samples from them when the chunk covers the last known
+    token.
+    """
+    x = jnp.take(params["tok_embed"], tokens, axis=0)           # (B,C,d)
+    B = tokens.shape[0]
+    fresh = positions[:, 0] == 0      # first chunk: reset recurrent state
+
+    def attn_fn(ap, hn, lc, flag):
+        if cfg.hybrid:
+            win = jnp.where(flag, jnp.int32(2**30),
+                            jnp.int32(cfg.sliding_window))
+            win = jnp.broadcast_to(win, (B,))    # dynamic -> reference path
+        else:
+            win = 0
+        a_out, kp, vp = attn.attention_paged_prefill(
+            ap, cfg, hn, positions, lc["k"], lc["v"], block_tables, valid,
+            window=win)
+        return a_out, {"k": kp, "v": vp}
+
+    def ssm_fn(sp, hn, lc):
+        conv = jnp.where(fresh[:, None, None], 0, lc["conv"][slots])
+        state = jnp.where(fresh[:, None, None, None], 0, lc["state"][slots])
+        delta, new_sc = ssm_mod.ssm_prefill(
+            sp, cfg, hn, ssm_mod.SSMCache(conv, state), valid)
+        return delta, ssm_mod.SSMCache(lc["conv"].at[slots].set(new_sc.conv),
+                                       lc["state"].at[slots].set(new_sc.state))
+
+    h, new_cache = _run_decode_layers(params, cfg, cache, x, attn_fn, ssm_fn)
+    h_last = jnp.take_along_axis(
+        h, jnp.maximum(valid - 1, 0)[:, None, None], axis=1)    # (B,1,d)
+    return logits_from_hidden(params, cfg, h_last)[:, 0], new_cache
 
 
 # ---------------------------------------------------------------------------

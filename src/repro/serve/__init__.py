@@ -1,7 +1,8 @@
 from repro.serve.engine import Engine, FinishedRequest, ServeConfig
 from repro.serve.kv_cache import BlockAllocator, OutOfBlocks, PagedCache
-from repro.serve.scheduler import FCFSScheduler, Request, RequestState
+from repro.serve.scheduler import (FCFSScheduler, Request, RequestState,
+                                   StepPlan)
 
 __all__ = ["Engine", "FinishedRequest", "ServeConfig", "BlockAllocator",
            "OutOfBlocks", "PagedCache", "FCFSScheduler", "Request",
-           "RequestState"]
+           "RequestState", "StepPlan"]

@@ -1,9 +1,28 @@
 """Continuous-batching inference engine over the paged KV/SSM cache.
 
-One jit-compiled step serves every in-flight request: slots in prefill
-feed their next known token, slots in decode feed their last sample, and
-idle slots feed a null token into the reserved null block.  Shapes are
-fixed at (max_seqs,) so the step compiles exactly once per model.
+Two jit-compiled device functions serve every in-flight request:
+
+  - a batched *decode* step of fixed shape (max_seqs,): slots in decode
+    feed their last sample; slots that are idle or mid-prefill ride along
+    inactive (zeroed table row -> null-block writes; recurrent state
+    gated by the ``active`` mask);
+  - a *prefill* step of fixed shape (1, chunk_size): one slot pushes a
+    chunk of known tokens through ``forward``-style attention, scattering
+    K/V straight into its pool blocks — O(P/chunk) engine steps per
+    P-token prompt instead of the O(P) token-by-token warmup, which is
+    what collapses time-to-first-token (benchmarks/serving.py).
+
+One engine step may mix both (continuous batching): the scheduler plans
+prefill chunks under ``prefill_budget`` tokens per step so decode latency
+stays bounded while prompts stream in.  ``chunk_size=0`` restores the
+legacy token-by-token prefill exactly.
+
+Prefix caching (``prefix_caching``, attention-only families) aliases
+cached full blocks into new requests' tables; the scheduler hands back
+copy-on-write (src, dst) pool copies which the engine runs as a third
+jitted function before the step.  SSM/hybrid families keep recurrent
+per-token state that block aliasing cannot reconstruct, so the engine
+silently disables prefix caching for them (chunked prefill still applies).
 
 Dense and SPA/OBSPA-pruned models go through the same code path — a
 pruned model is a plain smaller ``ArchConfig``, so serving it is just
@@ -11,7 +30,7 @@ building the engine on the pruned config/params (the paper's "direct
 computational benefit" made measurable; benchmarks/serving.py).
 
 Sampling: per-request temperature, 0 = greedy argmax; both resolved
-inside the jitted step so host<->device traffic per step is one (B,)
+inside the jitted steps so host<->device traffic per step is one small
 token transfer each way.
 """
 from __future__ import annotations
@@ -36,6 +55,9 @@ class ServeConfig:
     max_len: int = 512                # per-sequence token capacity
     num_blocks: int = 0               # 0 -> pool sized for worst case
     seed: int = 0
+    chunk_size: int = 32              # prefill chunk; 0/1 -> token-by-token
+    prefill_budget: int = 0           # max prefill tokens/step (0 = no cap)
+    prefix_caching: bool = True       # share full blocks across prefixes
 
     @property
     def blocks_per_seq(self) -> int:
@@ -55,6 +77,7 @@ class FinishedRequest:
     tokens: list[int]                 # generated tokens
     preemptions: int
     steps: int                        # engine steps, first admission -> finish
+    ttft_s: float = 0.0               # submission -> first sampled token
 
 
 class Engine:
@@ -71,6 +94,14 @@ class Engine:
             block_size=self.cfg.block_size,
             max_seqs=self.cfg.max_seqs)
         self._step_fn = jax.jit(self._step_impl, donate_argnums=(1,))
+        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=(1,))
+        self._cow_fn = jax.jit(self._cow_impl, donate_argnums=(0,))
+        # prefix caching needs the cached blocks to fully determine the
+        # model state they stand for; recurrent SSM/conv state is per-slot
+        # and not reconstructable from aliased KV blocks
+        self._prefix_ok = (self.cfg.prefix_caching
+                           and model.cfg.family != "ssm"
+                           and not model.cfg.hybrid)
         self.reset()
 
     def reset(self) -> None:
@@ -81,26 +112,45 @@ class Engine:
             max_seqs=self.cfg.max_seqs,
             num_blocks=self.cfg.pool_blocks(),
             block_size=self.cfg.block_size,
-            max_blocks_per_seq=self.cfg.blocks_per_seq)
+            max_blocks_per_seq=self.cfg.blocks_per_seq,
+            prefix_caching=self._prefix_ok)
         self.scheduler = FCFSScheduler(self.cache_host)
         self._key = jax.random.PRNGKey(self.cfg.seed)
         self._rid = 0
         self._steps = 0
         self._decode_tokens = 0
         self._prefill_tokens = 0
+        self._prefill_chunks = 0
+        self._cow_copies = 0
         self._admit_step: dict[int, int] = {}
         self._finish_step: dict[int, int] = {}
+        self._submit_wall: dict[int, float] = {}
+        self._first_tok_wall: dict[int, float] = {}
 
-    # ----- jitted step -----
-    def _step_impl(self, params, cache, tokens, positions, block_tables,
-                   temps, key):
-        logits, cache = self.model.paged_decode_step(
-            params, cache, tokens, positions, block_tables)
+    # ----- jitted steps -----
+    def _sample(self, logits, temps, key):
         greedy = jnp.argmax(logits, axis=-1)
         temps_safe = jnp.maximum(temps, 1e-6)[:, None]
         sampled = jax.random.categorical(key, logits / temps_safe, axis=-1)
-        nxt = jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
-        return nxt, cache
+        return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+
+    def _step_impl(self, params, cache, tokens, positions, block_tables,
+                   temps, active, key):
+        logits, cache = self.model.paged_decode_step(
+            params, cache, tokens, positions, block_tables, active)
+        return self._sample(logits, temps, key), cache
+
+    def _prefill_impl(self, params, cache, tokens, positions, slots,
+                      block_tables, valid, temps, key):
+        logits, cache = self.model.paged_prefill_step(
+            params, cache, tokens, positions, slots, block_tables, valid)
+        return self._sample(logits, temps, key), cache
+
+    def _cow_impl(self, cache, src, dst):
+        for name in ("k", "v"):
+            if name in cache:
+                cache[name] = cache[name].at[:, dst].set(cache[name][:, src])
+        return cache
 
     # ----- public API -----
     def add_request(self, prompt: Iterable[int], max_new_tokens: int = 32,
@@ -108,49 +158,90 @@ class Engine:
                     stop_tokens: Iterable[int] = ()) -> int:
         rid = self._rid
         self._rid += 1
+        self._submit_wall[rid] = time.time()
         self.scheduler.add(Request(
             rid=rid, prompt=tuple(int(t) for t in prompt),
             max_new_tokens=max_new_tokens, temperature=temperature,
             stop_tokens=tuple(stop_tokens)))
         return rid
 
+    def _append_sample(self, s: RequestState, tok: int) -> None:
+        self._decode_tokens += 1
+        if not s.generated:
+            self._first_tok_wall[s.req.rid] = time.time()
+        s.generated.append(tok)
+        if tok in s.req.stop_tokens:
+            s.stopped = True
+        if s.done:
+            self._finish_step[s.req.rid] = self._steps + 1
+
     def step(self) -> list[RequestState]:
-        """One engine step: schedule, run the batch, fold results back."""
-        running = list(self.scheduler.schedule())
+        """One engine step: schedule, run prefill chunks + the decode
+        batch, fold results back."""
+        plan = self.scheduler.plan_step(self.cfg.chunk_size,
+                                        self.cfg.prefill_budget)
+        running = plan.decode + [s for s, _ in plan.prefill]
         for s in running:
             self._admit_step.setdefault(s.req.rid, self._steps)
         if not running:
             return []
-        B = self.cfg.max_seqs
-        tokens = np.zeros((B,), np.int32)
-        positions = np.zeros((B,), np.int32)
-        temps = np.zeros((B,), np.float32)
-        for s in running:
-            tokens[s.slot] = s.next_token
-            positions[s.slot] = s.num_cached
-            temps[s.slot] = s.req.temperature
 
-        self._key, sub = jax.random.split(self._key)
-        nxt, self.cache = self._step_fn(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(positions), jnp.asarray(self.cache_host.tables),
-            jnp.asarray(temps), sub)
-        nxt = np.asarray(nxt)
+        for src, dst in plan.copies:          # copy-on-write pool copies
+            self.cache = self._cow_fn(self.cache, np.int32(src),
+                                      np.int32(dst))
+            self._cow_copies += 1
+
+        C = self.cfg.chunk_size
+        for s, n in plan.prefill:
+            seq = s.seq
+            toks = np.zeros((1, C), np.int32)
+            toks[0, :n] = seq[s.num_cached:s.num_cached + n]
+            pos = s.num_cached + np.arange(C, dtype=np.int32)[None]
+            self._key, sub = jax.random.split(self._key)
+            nxt, self.cache = self._prefill_fn(
+                self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray([s.slot], np.int32),
+                jnp.asarray(self.cache_host.tables[s.slot][None]),
+                jnp.asarray([n], np.int32),
+                jnp.asarray([s.req.temperature], np.float32), sub)
+            covered_last = s.num_cached + n == s.seq_len
+            s.num_cached += n
+            self._prefill_chunks += 1
+            self._prefill_tokens += n - (1 if covered_last else 0)
+            if covered_last:                  # chunk saw the last known token
+                self._append_sample(s, int(np.asarray(nxt)[0]))
+
+        if plan.decode:
+            B = self.cfg.max_seqs
+            tokens = np.zeros((B,), np.int32)
+            positions = np.zeros((B,), np.int32)
+            temps = np.zeros((B,), np.float32)
+            active = np.zeros((B,), bool)
+            for s in plan.decode:
+                tokens[s.slot] = s.next_token
+                positions[s.slot] = s.num_cached
+                temps[s.slot] = s.req.temperature
+                active[s.slot] = True
+            # inactive slots write into the null block, not their tables
+            tables = np.where(active[:, None], self.cache_host.tables, 0)
+
+            self._key, sub = jax.random.split(self._key)
+            nxt, self.cache = self._step_fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(positions), jnp.asarray(tables),
+                jnp.asarray(temps), jnp.asarray(active), sub)
+            nxt = np.asarray(nxt)
+
+            for s in plan.decode:
+                was_last_known = s.num_cached == s.seq_len - 1
+                s.num_cached += 1
+                if not was_last_known:        # still streaming known tokens
+                    self._prefill_tokens += 1
+                    continue
+                self._append_sample(s, int(nxt[s.slot]))
 
         self._steps += 1
-        for s in running:
-            was_last_known = s.num_cached == s.seq_len - 1
-            s.num_cached += 1
-            if not was_last_known:        # still streaming known tokens
-                self._prefill_tokens += 1
-                continue
-            self._decode_tokens += 1
-            tok = int(nxt[s.slot])
-            s.generated.append(tok)
-            if tok in s.req.stop_tokens:
-                s.stopped = True
-            if s.done:
-                self._finish_step[s.req.rid] = self._steps
+        self.scheduler.commit_progress()      # register newly-full blocks
         return running
 
     def run(self, requests: Iterable[dict[str, Any]] | None = None
@@ -169,13 +260,20 @@ class Engine:
         dt = time.time() - t0
 
         out = {}
+        ttfts = []
         for s in self.scheduler.finished[fin0:]:
             rid = s.req.rid
+            # submission -> first sampled token, valid whether the tokens
+            # came from manual step() calls or this run()'s drain
+            ttft = max(self._first_tok_wall.get(rid, t0)
+                       - self._submit_wall.get(rid, t0), 0.0)
+            ttfts.append(ttft)
             out[rid] = FinishedRequest(
                 rid=rid, prompt=s.req.prompt, tokens=list(s.generated),
                 preemptions=s.preemptions,
                 steps=(self._finish_step.get(rid, self._steps)
-                       - self._admit_step.get(rid, 0)))
+                       - self._admit_step.get(rid, 0)),
+                ttft_s=ttft)
         dec = self._decode_tokens - dec0
         pre = self._prefill_tokens - pre0
         stats = {
@@ -185,5 +283,8 @@ class Engine:
             "prefill_tokens": float(pre),
             "decode_tok_per_s": dec / max(dt, 1e-9),
             "total_tok_per_s": (dec + pre) / max(dt, 1e-9),
+            "prefill_chunks": float(self._prefill_chunks),
+            "cow_copies": float(self._cow_copies),
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
         }
         return out, stats

@@ -1,20 +1,41 @@
 """Block-pool KV/SSM cache management for continuous batching.
 
 The device side (the pools themselves) is built by
-``Model.init_paged_cache``; this module owns the *host* side: a free-list
-allocator over pool blocks and the per-slot block tables the engine feeds
-to each jitted step (per-slot lengths ride along as the ``positions``
-step input, derived from scheduler state).
+``Model.init_paged_cache``; this module owns the *host* side: a refcounted
+free-list allocator over pool blocks, the per-slot block tables the engine
+feeds to each jitted step, and a hash-keyed prefix index that lets requests
+sharing a prompt prefix alias *full* blocks instead of re-filling them.
 
-Invariants (enforced; tested in tests/test_serve.py):
+Block lifecycle (enforced by ``check()``; tested in
+tests/test_serve_properties.py):
+
+  free ──alloc──▶ live (ref >= 1) ──release/decref──▶ free
+                    │  ▲                        │
+               incref│  │incref (prefix hit)    │ registered in the prefix
+                    ▼  │                        ▼ index at release time
+                  live (ref > 1, shared)      cached (ref == 0, evictable)
+
+Invariants:
   - block 0 is the reserved null block (idle slots write there) and is
     never allocated;
-  - a block is owned by at most one slot at a time (no double alloc);
-  - freeing returns exactly the blocks a slot held (double free raises).
+  - ``free + live + cached`` partitions blocks ``1..N-1`` (pool
+    conservation — nothing leaks, nothing is double-owned);
+  - a live block's refcount equals the number of slot block tables that
+    reference it (shared blocks come only from prefix hits);
+  - cached blocks are exactly the ref==0 blocks still in the prefix
+    index; ``alloc`` evicts them LRU-first when the free list runs dry;
+  - freeing/decrefing a block a slot does not hold raises (double free).
+
+Copy-on-write: full blocks are immutable while shared.  The only write
+into a matched block is the re-fed last known token when a prefix hit
+covers the entire sequence (the model must still *see* that token to
+produce logits); ``prepare_write`` detects ref>1 blocks in the write
+range and hands the engine (src, dst) pool copies to run on device.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import Counter, OrderedDict
 
 import numpy as np
 
@@ -24,42 +45,112 @@ class OutOfBlocks(Exception):
 
 
 class BlockAllocator:
-    """LIFO free-list over ``num_blocks`` pool blocks; block 0 reserved."""
+    """Refcounted LIFO free-list over ``num_blocks`` blocks; block 0 reserved.
 
-    def __init__(self, num_blocks: int):
+    Three disjoint states: ``_free`` (stack), ``_ref`` (live, refcount >= 1)
+    and ``_cached`` (refcount 0 but retained for prefix reuse; LRU-evicted
+    by ``alloc`` when the free list is short).  ``on_evict(block)`` is
+    called when a cached block is reclaimed so the owner can drop its
+    prefix-index entry.
+    """
+
+    def __init__(self, num_blocks: int, on_evict=None):
         if num_blocks < 2:
             raise ValueError("need at least 2 blocks (one is the null block)")
         self.num_blocks = num_blocks
+        self.on_evict = on_evict
         self._free = list(range(num_blocks - 1, 0, -1))
-        self._used: set[int] = set()
+        self._ref: dict[int, int] = {}
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
+        # stats (benchmarks/serving.py): fresh allocations vs prefix reuse
+        self.total_allocated = 0
+        self.peak_live = 0
 
     @property
     def num_free(self) -> int:
         return len(self._free)
 
     @property
-    def num_used(self) -> int:
-        return len(self._used)
+    def num_live(self) -> int:
+        return len(self._ref)
+
+    # old name, kept for callers that predate the cached state
+    num_used = num_live
+
+    @property
+    def num_cached(self) -> int:
+        return len(self._cached)
+
+    @property
+    def num_available(self) -> int:
+        """Blocks an alloc() can obtain: free plus evictable cached."""
+        return len(self._free) + len(self._cached)
+
+    def ref(self, block: int) -> int:
+        return self._ref.get(block, 0)
 
     def alloc(self, n: int = 1) -> list[int]:
-        if n > len(self._free):
-            raise OutOfBlocks(f"need {n} blocks, have {len(self._free)}")
+        if n > self.num_available:
+            raise OutOfBlocks(f"need {n} blocks, have {self.num_available}")
+        while len(self._free) < n:            # reclaim cached, LRU first
+            b, _ = self._cached.popitem(last=False)
+            if self.on_evict is not None:
+                self.on_evict(b)
+            self._free.append(b)
         out = [self._free.pop() for _ in range(n)]
-        self._used.update(out)
+        for b in out:
+            self._ref[b] = 1
+        self.total_allocated += n
+        self.peak_live = max(self.peak_live, len(self._ref))
         return out
 
+    def incref(self, block: int) -> None:
+        """Share a live block, or revive a cached one (prefix hit)."""
+        if block in self._ref:
+            self._ref[block] += 1
+        elif block in self._cached:
+            del self._cached[block]
+            self._ref[block] = 1
+            self.peak_live = max(self.peak_live, len(self._ref))
+        else:
+            raise ValueError(f"incref of free/foreign block {block}")
+
+    def decref(self, block: int, retain: bool = False) -> bool:
+        """Drop one reference; on 0 the block is cached (``retain``) or
+        freed.  Returns True when the last reference was dropped."""
+        if block not in self._ref:
+            raise ValueError(f"double free / foreign block {block}")
+        self._ref[block] -= 1
+        if self._ref[block]:
+            return False
+        del self._ref[block]
+        if retain:
+            self._cached[block] = None        # newest at the LRU tail
+        else:
+            self._free.append(block)
+        return True
+
     def free(self, blocks: list[int]) -> None:
+        """Hard-free unshared blocks (legacy API; shared blocks raise)."""
         for b in blocks:
-            if b not in self._used:
-                raise ValueError(f"double free / foreign block {b}")
-            self._used.remove(b)
-            self._free.append(b)
+            if self._ref.get(b, 0) > 1:
+                raise ValueError(f"freeing shared block {b} (ref>1)")
+            self.decref(b)
 
     def check(self) -> None:
-        """Invariant: free + used partition blocks 1..N-1, 0 untouched."""
-        assert 0 not in self._used and 0 not in self._free
-        assert not (set(self._free) & self._used)
-        assert len(self._free) + len(self._used) == self.num_blocks - 1
+        """Invariant: free + live + cached partition 1..N-1, 0 untouched."""
+        free, live, cached = set(self._free), set(self._ref), set(self._cached)
+        assert 0 not in free and 0 not in live and 0 not in cached
+        assert len(free) == len(self._free)               # no dup in stack
+        assert not (free & live) and not (free & cached) and not (live & cached)
+        assert len(free) + len(live) + len(cached) == self.num_blocks - 1
+        assert all(r >= 1 for r in self._ref.values())
+
+
+def _chain_hash(parent: int, tokens: tuple[int, ...]) -> int:
+    """Position-aware content hash for one full block, chained from the
+    previous block's hash so equal content at different depths differs."""
+    return hash((parent, tokens))
 
 
 @dataclasses.dataclass
@@ -70,13 +161,20 @@ class PagedCache:
     num_blocks: int
     block_size: int
     max_blocks_per_seq: int
+    prefix_caching: bool = False
 
     def __post_init__(self):
-        self.allocator = BlockAllocator(self.num_blocks)
+        self.allocator = BlockAllocator(self.num_blocks,
+                                        on_evict=self._forget_block)
         # null block 0 everywhere: idle slots harmlessly write into it
         self.tables = np.zeros((self.max_seqs, self.max_blocks_per_seq),
                                np.int32)
         self._owned: list[list[int]] = [[] for _ in range(self.max_seqs)]
+        # prefix index: chained content hash <-> pool block (full blocks only)
+        self._block_of: dict[int, int] = {}          # hash  -> block
+        self._hash_of: dict[int, int] = {}           # block -> hash
+        # per-slot (committed full blocks, last committed hash)
+        self._committed: list[tuple[int, int]] = [(0, 0)] * self.max_seqs
 
     @property
     def max_len(self) -> int:
@@ -85,6 +183,7 @@ class PagedCache:
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
 
+    # ----- allocation / growth -----
     def ensure(self, slot: int, n_tokens: int) -> None:
         """Grow slot's table to cover ``n_tokens``; raises OutOfBlocks."""
         if n_tokens > self.max_len:
@@ -99,9 +198,102 @@ class PagedCache:
         self.tables[slot, start:start + len(new)] = new
 
     def release(self, slot: int) -> None:
-        self.allocator.free(self._owned[slot])
+        """Refcount-aware release: registered full blocks stay cached for
+        prefix reuse; everything else returns to the free list."""
+        for b in self._owned[slot]:
+            self.allocator.decref(b, retain=b in self._hash_of)
         self._owned[slot] = []
         self.tables[slot] = 0
+        self._committed[slot] = (0, 0)
 
     def owned(self, slot: int) -> list[int]:
         return list(self._owned[slot])
+
+    # ----- prefix caching -----
+    def _forget_block(self, block: int) -> None:
+        h = self._hash_of.pop(block)
+        del self._block_of[h]
+
+    def assign_prefix(self, slot: int, tokens: tuple[int, ...]) -> int:
+        """Alias the longest chain of cached full blocks matching ``tokens``
+        into an empty slot's table (incref each).  Returns matched tokens
+        (a multiple of block_size; the scheduler caps ``num_cached`` at
+        len(tokens)-1 and COWs via ``prepare_write`` when needed)."""
+        assert not self._owned[slot], "assign_prefix on a non-empty slot"
+        if not self.prefix_caching:
+            return 0
+        bs = self.block_size
+        h = 0
+        matched: list[int] = []
+        while (len(matched) + 1) * bs <= len(tokens):
+            i = len(matched)
+            h2 = _chain_hash(h, tuple(tokens[i * bs:(i + 1) * bs]))
+            b = self._block_of.get(h2)
+            if b is None:
+                break
+            self.allocator.incref(b)
+            matched.append(b)
+            h = h2
+        if matched:
+            self._owned[slot] = matched
+            self.tables[slot, :len(matched)] = matched
+            self._committed[slot] = (len(matched), h)
+        return len(matched) * bs
+
+    def commit(self, slot: int, tokens: tuple[int, ...]) -> None:
+        """Register slot blocks that became full (``tokens`` = the written
+        prefix so far) in the prefix index.  Duplicate content keeps the
+        first registration (dedup happens at match time)."""
+        if not self.prefix_caching:
+            return
+        bs = self.block_size
+        count, h = self._committed[slot]
+        full = len(tokens) // bs
+        for i in range(count, full):
+            h = _chain_hash(h, tuple(tokens[i * bs:(i + 1) * bs]))
+            b = self._owned[slot][i]
+            if h not in self._block_of and b not in self._hash_of:
+                self._block_of[h] = b
+                self._hash_of[b] = h
+        if full > count:
+            self._committed[slot] = (full, h)
+
+    def prepare_write(self, slot: int, start: int, end: int
+                      ) -> list[tuple[int, int]]:
+        """Copy-on-write guard: the slot is about to write token positions
+        [start, end).  Any shared (ref>1) block in that range is replaced
+        by a fresh block; returns (src, dst) pool copies for the engine to
+        run on device.  May raise OutOfBlocks."""
+        copies: list[tuple[int, int]] = []
+        for bi in range(start // self.block_size,
+                        (end - 1) // self.block_size + 1):
+            if bi >= len(self._owned[slot]):
+                continue
+            b = self._owned[slot][bi]
+            if self.allocator.ref(b) > 1:
+                [new] = self.allocator.alloc(1)
+                self.allocator.decref(b, retain=b in self._hash_of)
+                self._owned[slot][bi] = new
+                self.tables[slot, bi] = new
+                copies.append((b, new))
+        return copies
+
+    # ----- invariant oracle (property tests) -----
+    def check(self) -> None:
+        self.allocator.check()
+        # refcounts == multiplicity across live block tables
+        owned_ct = Counter(b for lst in self._owned for b in lst)
+        assert dict(owned_ct) == self.allocator._ref, \
+            (dict(owned_ct), self.allocator._ref)
+        # table rows mirror ownership, zero past the owned prefix
+        for slot, lst in enumerate(self._owned):
+            assert list(self.tables[slot, :len(lst)]) == lst
+            assert not self.tables[slot, len(lst):].any()
+        # prefix index: bijective, and every entry points at a live or
+        # cached block; every cached block is in the index
+        assert len(self._block_of) == len(self._hash_of)
+        for h, b in self._block_of.items():
+            assert self._hash_of[b] == h
+            assert b in self.allocator._ref or b in self.allocator._cached
+        for b in self.allocator._cached:
+            assert b in self._hash_of

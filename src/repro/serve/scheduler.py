@@ -1,24 +1,33 @@
-"""FCFS continuous-batching scheduler.
+"""FCFS continuous-batching scheduler with chunked prefill.
 
 Requests wait in arrival order; each engine step the scheduler (a) retires
 finished requests and frees their blocks, (b) grows the block tables of
 running requests that crossed a block boundary — preempting the *youngest*
 running request back to the waiting queue when the pool is exhausted
 (vLLM-style recompute preemption: its blocks are freed and its
-prompt+generated prefix is re-prefilled on re-admission), and (c) admits
-waiting requests into free slots while the pool can hold their prefix.
+prompt+generated prefix is re-prefilled on re-admission), (c) admits
+waiting requests into free slots while the pool can hold their prefix
+(aliasing cached prefix blocks via ``PagedCache.assign_prefix`` when
+prefix caching is on), and (d) plans this step's work as a ``StepPlan``:
+which slots take a batched decode token and which take a prefill chunk,
+under a per-step prefill token budget.
 
-Prefill and decode share one batched step: an admitted request first
-streams its known tokens through the decode path (logits discarded until
-the prefix is exhausted), then flips to sampling — so a step may mix
-prefilling and decoding sequences, which is exactly continuous batching.
+With ``chunk_size <= 1`` prefill degrades to the original token-by-token
+path: every running slot rides the batched decode step and the plan's
+``prefill`` list is empty.  With chunking, a slot in prefill phase
+advances up to ``chunk_size`` known tokens per step through the model's
+``paged_prefill_step`` — O(P/chunk) engine steps instead of O(P).
 
 Token-feed invariant (engine + scheduler contract): a request's sequence
-so far is ``seq = prompt + generated``; each step feeds ``seq[num_cached]``
-at position ``num_cached``; after the step ``num_cached += 1`` and the
-sampled token is appended iff ``num_cached == len(seq)`` (i.e. the model
-just saw the last known token).  This one rule covers fresh prefill,
-steady-state decode, and re-prefill after preemption.
+so far is ``seq = prompt + generated``; each step feeds
+``seq[num_cached : num_cached + n]`` at positions ``num_cached + i``
+(n == 1 on the decode path); after the step ``num_cached += n`` and the
+sampled token is appended iff the model just saw the last known token
+(``num_cached == len(seq)``).  This one rule covers fresh prefill,
+steady-state decode, re-prefill after preemption, and prefix-hit
+admission (which simply starts ``num_cached`` at the matched length,
+capped at ``len(seq) - 1`` so the last known token is always re-fed —
+the copy-on-write case in kv_cache.py).
 """
 from __future__ import annotations
 
@@ -48,6 +57,10 @@ class RequestState:
     stopped: bool = False
 
     @property
+    def seq(self) -> tuple[int, ...]:
+        return self.req.prompt + tuple(self.generated)
+
+    @property
     def seq_len(self) -> int:
         return len(self.req.prompt) + len(self.generated)
 
@@ -72,6 +85,15 @@ class RequestState:
         self.preemptions += 1
 
 
+@dataclasses.dataclass
+class StepPlan:
+    """One engine step's work: a batched decode set, per-slot prefill
+    chunks (state, n_tokens), and device pool copies (COW) to run first."""
+    decode: list[RequestState]
+    prefill: list[tuple[RequestState, int]]
+    copies: list[tuple[int, int]]
+
+
 class FCFSScheduler:
     def __init__(self, cache: PagedCache):
         self.cache = cache
@@ -79,6 +101,7 @@ class FCFSScheduler:
         self.running: list[RequestState] = []
         self.finished: list[RequestState] = []
         self._free_slots = list(range(cache.max_seqs - 1, -1, -1))
+        self._copies: list[tuple[int, int]] = []
 
     # ----- queue -----
     def add(self, req: Request) -> RequestState:
@@ -146,23 +169,74 @@ class FCFSScheduler:
         self.waiting.appendleft(victim)       # FCFS: retry before newer work
 
     def admit(self) -> list[RequestState]:
-        """Admit waiting requests while a slot + prefix-sized pool room exist."""
+        """Admit waiting requests while a slot + prefix-sized pool room
+        exist.  With prefix caching, cached full blocks matching the
+        request's sequence are aliased in and ``num_cached`` jumps past
+        them (capped at seq_len-1; a full-cover hit triggers COW on the
+        re-fed last block)."""
         admitted = []
         while self.waiting and self._free_slots:
             cand = self.waiting[0]
-            need = self.cache.blocks_for(cand.seq_len + 1)
-            if self.cache.allocator.num_free < need:
+            slot = self._free_slots[-1]
+            seq = cand.seq
+            copies: list[tuple[int, int]] = []
+            try:
+                matched = self.cache.assign_prefix(slot, seq)
+                nc = min(matched, len(seq) - 1)
+                if nc < matched:
+                    # write cursor landed inside a shared block: COW now
+                    copies = self.cache.prepare_write(slot, nc, nc + 1)
+                self.cache.ensure(slot, len(seq) + 1)
+            except OutOfBlocks:
+                self.cache.release(slot)      # roll back partial admission
                 break
             self.waiting.popleft()
-            cand.slot = self._free_slots.pop()
-            self.cache.ensure(cand.slot, cand.seq_len + 1)
+            self._free_slots.pop()
+            cand.slot = slot
+            cand.num_cached = nc
+            self._copies.extend(copies)
             self.running.append(cand)
             admitted.append(cand)
         return admitted
 
-    def schedule(self) -> Sequence[RequestState]:
-        """One scheduling round; returns the running set for this step."""
+    def plan_step(self, chunk_size: int = 0, prefill_budget: int = 0
+                  ) -> StepPlan:
+        """One scheduling round.  Returns the step plan; ``chunk_size <= 1``
+        reproduces the legacy all-through-decode behavior exactly."""
         self.retire_finished()
         self.grow_or_preempt()
         self.admit()
-        return self.running
+        copies, self._copies = self._copies, []
+        if chunk_size <= 1:
+            return StepPlan(decode=list(self.running), prefill=[],
+                            copies=copies)
+        decode = [s for s in self.running if s.phase == "decode"]
+        prefill: list[tuple[RequestState, int]] = []
+        budget = prefill_budget if prefill_budget > 0 else float("inf")
+        for s in sorted(self.running, key=lambda r: r.req.rid):
+            if s.phase != "prefill" or budget <= 0:
+                continue
+            n = int(min(chunk_size, s.seq_len - s.num_cached, budget))
+            # admission pre-reserved blocks through seq_len+1, so the
+            # chunk's write range is already backed; assert, don't alloc
+            assert self.cache.blocks_for(s.num_cached + n) <= \
+                len(self.cache.owned(s.slot))
+            prefill.append((s, n))
+            budget -= n
+        return StepPlan(decode=decode, prefill=prefill, copies=copies)
+
+    def commit_progress(self) -> None:
+        """Register newly-filled full blocks in the prefix index (no-op
+        when prefix caching is off)."""
+        if not self.cache.prefix_caching:
+            return
+        for s in self.running:
+            self.cache.commit(s.slot, s.seq[:s.num_cached])
+
+    def schedule(self) -> Sequence[RequestState]:
+        """Legacy single-token scheduling round; returns the running set.
+        Pending COW copies are re-queued, not dropped — a caller that later
+        switches to ``plan_step`` (the engine) still receives them."""
+        plan = self.plan_step(chunk_size=0)
+        self._copies = plan.copies + self._copies
+        return plan.decode

@@ -153,6 +153,77 @@ def test_paged_attention_kernel_parity(B, H, KH, D, DV, bs, NB, window,
                                rtol=tol, atol=tol)
 
 
+def test_paged_attention_skips_fully_masked_blocks():
+    """Tables that are mostly empty (short sequences in a long table) must
+    not be visited past their length: the visit counter proves the skip
+    actually fires, and parity vs the reference proves it is harmless."""
+    B, H, KH, D, bs, NB = 3, 4, 2, 16, 4, 16          # 64-token tables
+    P = B * NB + 1
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, bs, KH, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, bs, KH, D)), jnp.float32)
+    tables = jnp.asarray(1 + rng.permutation(B * NB).reshape(B, NB),
+                         jnp.int32)
+    lens = jnp.asarray([1, 5, 9], jnp.int32)          # 1-3 of 16 blocks live
+    out, visits = paged_attention(q, kp, vp, tables, lens, use_kernel=True,
+                                  interpret=True, return_visits=True)
+    ref = paged_attention_reference(q, kp, vp, tables, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    expect = [-(-int(l) // bs) for l in lens]          # ceil(len / bs)
+    np.testing.assert_array_equal(np.asarray(visits),
+                                  np.tile(np.asarray(expect)[:, None], KH))
+    assert int(np.asarray(visits).sum()) < B * NB * KH  # skip really fired
+
+
+def test_paged_attention_window_skips_left_of_window():
+    """Sliding window: blocks wholly left of every query's window are
+    skipped too (they are fully masked regardless of length)."""
+    B, H, KH, D, bs, NB = 1, 2, 2, 16, 4, 8
+    P = B * NB + 1
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, bs, KH, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, bs, KH, D)), jnp.float32)
+    tables = jnp.asarray(1 + rng.permutation(NB)[None], jnp.int32)
+    lens = jnp.asarray([NB * bs], jnp.int32)           # full table...
+    out, visits = paged_attention(q, kp, vp, tables, lens, window=6,
+                                  use_kernel=True, interpret=True,
+                                  return_visits=True)
+    ref = paged_attention_reference(q, kp, vp, tables, lens, window=6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert int(np.asarray(visits)[0, 0]) == 2          # ...but 2 blocks seen
+
+
+@pytest.mark.parametrize("B,C,H,KH,D,bs,NB", [
+    (2, 4, 4, 2, 16, 8, 4),
+    (3, 7, 4, 1, 32, 4, 8),
+    (1, 16, 8, 8, 16, 16, 2),
+])
+def test_paged_prefill_kernel_parity(B, C, H, KH, D, bs, NB):
+    """Prefill-aware masking: C queries per sequence at absolute positions
+    q_start + i, kernel vs gather reference, including partial chunks."""
+    from repro.kernels.paged_attention import (
+        paged_prefill_attention, paged_prefill_attention_reference)
+    P = B * NB + 1
+    q = jnp.asarray(rng.normal(size=(B, C, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, bs, KH, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, bs, KH, D)), jnp.float32)
+    tables = jnp.asarray(1 + rng.permutation(B * NB).reshape(B, NB),
+                         jnp.int32)
+    starts = jnp.asarray(rng.integers(0, NB * bs - C + 1, size=(B,)),
+                         jnp.int32)
+    valid = rng.integers(1, C + 1, size=(B,))
+    lens = starts + jnp.asarray(valid, jnp.int32)
+    out = paged_prefill_attention(q, kp, vp, tables, starts, lens,
+                                  use_kernel=True, interpret=True)
+    ref = paged_prefill_attention_reference(q, kp, vp, tables, starts, lens)
+    for b in range(B):                 # rows past valid are don't-care
+        np.testing.assert_allclose(np.asarray(out)[b, :valid[b]],
+                                   np.asarray(ref)[b, :valid[b]],
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_paged_attention_matches_contiguous_flash():
     """Paged ref with an identity table == dense attention over the prefix."""
     from repro.kernels.flash_attention import flash_attention_ref

@@ -1,0 +1,215 @@
+"""Property-based tests for the serving allocator / scheduler invariants.
+
+DepGraph-style lesson (arXiv:2301.12900): coupled-state invariants are
+where silent corruption hides.  Here the coupled state is block ownership:
+the allocator's refcounts, the per-slot block tables, the prefix index and
+the scheduler's admit/grow/preempt/release transitions must stay mutually
+consistent under *any* interleaving.  Two drivers exercise them:
+
+  1. a raw ``BlockAllocator`` state machine (random
+     alloc/incref/decref/free against a pure-python mirror — conservation,
+     refcount bookkeeping, double-free detection);
+  2. a full ``FCFSScheduler`` + ``PagedCache`` run with a fake engine loop
+     (random small-vocab prompts so prefix hits, COW and eviction all
+     fire; random chunk sizes/budgets; pools sized to force preemption).
+
+``BlockAllocator.check()`` / ``PagedCache.check()`` run as the oracle
+after every operation.  The hypothesis variants explore the same drivers
+from minimized counterexamples; the seeded fallback keeps the properties
+exercised where hypothesis isn't installed (it is optional, see
+requirements.txt).
+"""
+import random
+
+import pytest
+
+from repro.serve import (FCFSScheduler, OutOfBlocks, PagedCache, Request)
+from repro.serve.kv_cache import BlockAllocator
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Driver 1: allocator state machine vs a pure-python mirror
+# ---------------------------------------------------------------------------
+
+def drive_allocator(seed: int, steps: int = 300) -> None:
+    rng = random.Random(seed)
+    num_blocks = rng.randint(2, 24)
+    evicted = []
+    a = BlockAllocator(num_blocks, on_evict=evicted.append)
+    refs: dict[int, int] = {}          # mirror of live refcounts
+    cached: set[int] = set()
+
+    for _ in range(steps):
+        op = rng.choice(["alloc", "incref", "decref", "free", "bad_free"])
+        if op == "alloc":
+            n = rng.randint(1, 3)
+            if n > len(a._free) + len(cached):
+                with pytest.raises(OutOfBlocks):
+                    a.alloc(n)
+            else:
+                got = a.alloc(n)
+                assert len(set(got)) == n and 0 not in got
+                for b in got:
+                    assert b not in refs
+                    refs[b] = 1
+                cached -= set(evicted)
+                evicted.clear()
+        elif op == "incref" and (refs or cached):
+            b = rng.choice(sorted(refs) + sorted(cached))
+            a.incref(b)
+            refs[b] = refs.get(b, 0) + 1
+            cached.discard(b)
+        elif op == "decref" and refs:
+            b = rng.choice(sorted(refs))
+            retain = rng.random() < 0.5
+            freed = a.decref(b, retain=retain)
+            refs[b] -= 1
+            assert freed == (refs[b] == 0)
+            if refs[b] == 0:
+                del refs[b]
+                if retain:
+                    cached.add(b)
+        elif op == "free":
+            singles = [b for b, r in refs.items() if r == 1]
+            if singles:
+                b = rng.choice(sorted(singles))
+                a.free([b])
+                del refs[b]
+        elif op == "bad_free":
+            dead = [b for b in range(1, num_blocks)
+                    if b not in refs and rng.random() < 0.5]
+            if dead:
+                with pytest.raises(ValueError):   # never double-free
+                    a.free([dead[0]])
+        a.check()
+        assert a._ref == refs                      # refcounts exact
+        assert set(a._cached) == cached
+        assert a.num_free + a.num_live + a.num_cached == num_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# Driver 2: scheduler + cache under a fake engine loop
+# ---------------------------------------------------------------------------
+
+def drive_scheduler(seed: int, rounds: int = 120) -> None:
+    rng = random.Random(seed)
+    bs = rng.choice([2, 4])
+    max_seqs = rng.randint(1, 4)
+    nb_per_seq = rng.randint(3, 6)
+    # undersized pools force grow/preempt; oversized ones exercise caching
+    usable = rng.randint(nb_per_seq, max_seqs * nb_per_seq)
+    cache = PagedCache(max_seqs=max_seqs, num_blocks=usable + 1,
+                       block_size=bs, max_blocks_per_seq=nb_per_seq,
+                       prefix_caching=rng.random() < 0.7)
+    sched = FCFSScheduler(cache)
+    chunk = rng.choice([0, 1, 2, 3, 5])
+    budget = rng.choice([0, 1, 4])
+    rid = 0
+
+    for _ in range(rounds):
+        if rng.random() < 0.4:
+            # vocab {0,1} prompts: prefix collisions (and so sharing, COW
+            # and eviction) are the common case, not the rare one
+            plen = rng.randint(1, max(1, cache.max_len - 2))
+            gen = rng.randint(1, cache.max_len - plen)
+            if cache.blocks_for(plen + gen) <= usable:
+                sched.add(Request(rid, tuple(rng.randint(0, 1)
+                                             for _ in range(plen)),
+                                  max_new_tokens=gen))
+                rid += 1
+        try:
+            plan = sched.plan_step(chunk, budget)
+        except OutOfBlocks:
+            # a lone request legitimately outgrew an undersized pool
+            cache.check()
+            return
+        cache.check()
+        for s, n in plan.prefill:
+            assert 0 < n <= max(chunk, 1)
+            covered = s.num_cached + n == s.seq_len
+            s.num_cached += n
+            if covered:
+                s.generated.append(rng.randint(0, 1))
+        for s in plan.decode:
+            was_last = s.num_cached == s.seq_len - 1
+            s.num_cached += 1
+            if was_last:
+                s.generated.append(rng.randint(0, 1))
+                if rng.random() < 0.1:
+                    s.stopped = True
+        sched.commit_progress()
+        cache.check()
+        # conservation, stated exactly as the issue demands:
+        alloc = cache.allocator
+        assert alloc.num_free + alloc.num_live + alloc.num_cached == usable
+    # drain what's left so release paths run too
+    for s in list(sched.running):
+        s.stopped = True
+    sched.retire_finished()
+    cache.check()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis variants (preferred when available)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**16))
+    @settings(max_examples=40, deadline=None)
+    def test_allocator_state_machine_hypothesis(seed):
+        drive_allocator(seed)
+
+    @given(st.integers(0, 2**16))
+    @settings(max_examples=30, deadline=None)
+    def test_scheduler_conservation_hypothesis(seed):
+        drive_scheduler(seed)
+
+
+# ---------------------------------------------------------------------------
+# seeded fallback (always runs; hypothesis is an optional dependency)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(25))
+def test_allocator_state_machine(seed):
+    drive_allocator(seed * 7919)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_scheduler_conservation(seed):
+    drive_scheduler(seed * 104729)
+
+
+def test_cached_blocks_are_reclaimed_lru_first():
+    a = BlockAllocator(5)
+    got = a.alloc(4)
+    order = []
+    a.on_evict = order.append
+    for b in got:
+        a.decref(b, retain=True)      # all cached, LRU = got[0]
+    assert a.num_cached == 4 and a.num_free == 0
+    fresh = a.alloc(2)                 # must evict the two oldest
+    assert order == got[:2]
+    assert set(fresh) == set(got[:2])
+    a.check()
+
+
+def test_prefix_index_drops_entries_on_eviction():
+    c = PagedCache(max_seqs=2, num_blocks=4, block_size=2,
+                   max_blocks_per_seq=3, prefix_caching=True)
+    toks = (1, 2, 3, 4)
+    assert c.assign_prefix(0, toks) == 0        # empty index: no match
+    c.ensure(0, 4)
+    c.commit(0, toks)                            # two full blocks registered
+    c.release(0)                                 # -> cached, still indexed
+    assert c.assign_prefix(0, toks) == 4         # round-trips via the index
+    c.release(0)
+    c.ensure(1, 6)                               # forces eviction of both
+    c.check()
+    assert c.assign_prefix(0, toks) == 0         # index entries were dropped
+    c.check()

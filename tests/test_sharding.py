@@ -57,11 +57,41 @@ def test_cell_support_matrix():
     from repro.configs import cell_supported, ASSIGNED_ARCHS
     rows = {(a, s): cell_supported(get_config(a), SHAPES[s])[0]
             for a in ASSIGNED_ARCHS for s in SHAPES}
-    assert sum(rows.values()) == 31          # documented runnable cells
+    assert sum(rows.values()) == 49          # documented runnable cells
     assert not rows[("qwen3-1.7b", "long_500k")]
     assert rows[("mamba2-1.3b", "long_500k")]
     assert rows[("hymba-1.5b", "long_500k")]
     assert not rows[("hubert-xlarge", "decode_32k")]
+    # the serving-engine steps joined the grid with this PR
+    assert rows[("tinyllama-1.1b", "paged_decode_32k")]
+    assert rows[("mamba2-1.3b", "paged_prefill_512")]
+    assert not rows[("hubert-xlarge", "paged_decode_32k")]
+
+
+def test_dryrun_paged_cells_lower(tmp_path, monkeypatch):
+    """The roofline grid's new paged decode/prefill cells lower + compile
+    and land in the dry-run artifact (reduced dims, 1-device mesh — the
+    full 512-device sweep runs under --runslow)."""
+    import repro.launch.dryrun as dryrun
+    from repro.launch.mesh import make_test_mesh
+
+    monkeypatch.setattr(dryrun, "make_production_mesh",
+                        lambda *, multi_pod=False: make_test_mesh())
+    red = dict(num_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+               head_dim=16, d_ff=128, vocab_size=256, dtype="float32",
+               remat=False)
+    out = tmp_path / "dryrun_paged.json"
+    records = []
+    for shape in ("paged_decode_32k", "paged_prefill_512"):
+        rec, _ = dryrun.lower_cell("tinyllama-1.1b", shape, False,
+                                   opt_overrides=red)
+        assert rec["status"] == "ok", rec
+        assert rec["flops_per_device"] > 0
+        records.append(rec)
+    out.write_text(json.dumps(records))
+    rows = json.loads(out.read_text())        # artifact round-trips
+    assert {r["shape"] for r in rows} == {"paged_decode_32k",
+                                          "paged_prefill_512"}
 
 
 @pytest.mark.slow
@@ -71,7 +101,8 @@ def test_dryrun_subprocess_small():
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env["PYTHONPATH"] = os.path.join(repo, "src")
     for arch, shape in [("tinyllama-1.1b", "train_4k"),
-                        ("mamba2-1.3b", "decode_32k")]:
+                        ("mamba2-1.3b", "decode_32k"),
+                        ("tinyllama-1.1b", "paged_decode_32k")]:
         r = subprocess.run(
             [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
              "--shape", shape, "--multi-pod", "both"],
@@ -81,15 +112,17 @@ def test_dryrun_subprocess_small():
 
 
 def test_dryrun_results_complete():
-    """The committed baseline sweep must cover all 80 cells with 0 errors."""
+    """The committed baseline sweep must cover all 120 cells with 0 errors
+    (10 archs x 6 shapes x 2 meshes; the paged serving cells joined the
+    grid with the prefill-subsystem PR)."""
     path = os.path.join(os.path.dirname(__file__), "..", "results",
                         "dryrun_baseline.json")
     if not os.path.exists(path):
         pytest.skip("baseline sweep not generated yet")
     rows = json.load(open(path))
-    assert len(rows) == 80
+    assert len(rows) == 120
     by = {}
     for r in rows:
         by.setdefault(r["status"], []).append(r)
     assert "error" not in by, by.get("error")
-    assert len(by["ok"]) == 62 and len(by["skipped"]) == 18
+    assert len(by["ok"]) == 98 and len(by["skipped"]) == 22
