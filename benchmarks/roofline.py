@@ -50,6 +50,14 @@ def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
         if cfg.n_heads:
             f += 4 * B * cfg.n_heads * cfg.head_dim_ * S * S * 0.5
         return f
+    if shape.kind == "spec_verify":
+        # C = K+1 speculative tokens scored against an S-token cache
+        from repro.configs import SPEC_VERIFY_CHUNK
+        C = SPEC_VERIFY_CHUNK
+        f = 2.0 * N * B * C
+        if cfg.n_heads:
+            f += 4 * B * C * cfg.n_heads * cfg.head_dim_ * S
+        return f
     # decode: one token against an S-token cache
     f = 2.0 * N * B
     if cfg.n_heads:

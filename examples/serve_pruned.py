@@ -1,11 +1,16 @@
-"""Serving example: continuous batching, dense vs OBSPA-pruned.
+"""Serving example: continuous batching, dense vs OBSPA-pruned, and the
+pruned model reused as a speculative draft.
 
 Structured pruning pays at serving time with zero serving-stack changes:
 the pruned model is just a smaller model, so the same paged-KV engine
-serves it — only faster.
+serves it — only faster.  And because it shares the dense model's
+vocabulary, it doubles as a free *draft* for lossless self-speculative
+decoding: serve the dense model's exact outputs while the pruned model
+proposes K tokens per step (DESIGN.md §9).
 
   PYTHONPATH=src python examples/serve_pruned.py
 """
+import dataclasses
 import os
 import sys
 import time
@@ -24,8 +29,12 @@ PROMPT_LEN, GEN, N_REQ = 32, 32, 16
 SERVE = ServeConfig(max_seqs=8, block_size=16, max_len=PROMPT_LEN + GEN)
 
 
-def bench(model, params, prompts):
-    eng = Engine(model, params, SERVE)             # compiled once
+def bench(model, params, prompts, **spec_kwargs):
+    cfg = SERVE
+    if spec_kwargs:                    # K tokens of reservation headroom
+        cfg = dataclasses.replace(SERVE, max_len=PROMPT_LEN + GEN + 4,
+                                  spec_k=4)
+    eng = Engine(model, params, cfg, **spec_kwargs)    # compiled once
 
     def serve_once():
         eng.reset()
@@ -50,7 +59,7 @@ def main():
     prompts = [[int(t) for t in toks[i, :PROMPT_LEN - 8 * (i % 3)]]
                for i in range(N_REQ)]
 
-    _, tps_dense, _ = bench(model, params, prompts)
+    out_d, tps_dense, _ = bench(model, params, prompts)
     print(f"dense : {tps_dense:8.1f} tok/s  ({cfg.param_count():,} params)")
 
     calib = batches(cfg, "datafree", 4, 8, 32, seed=3, with_targets=False)
@@ -59,6 +68,18 @@ def main():
     _, tps_pruned, _ = bench(pruned, pr.params, prompts)
     print(f"pruned: {tps_pruned:8.1f} tok/s  ({pr.cfg.param_count():,} params)"
           f"  speedup {tps_pruned / tps_dense:.2f}x")
+
+    # the pruned model as a speculative draft: dense-quality outputs (the
+    # verify pass accepts or replaces every draft, so this is lossless —
+    # on a random-init model almost everything is rejected and the
+    # acceptance rate is the interesting number; see DESIGN.md §9)
+    out_s, _, stats = bench(model, params, prompts,
+                            draft_model=pruned, draft_params=pr.params)
+    assert all(out_s[r].tokens == out_d[r].tokens for r in out_d), \
+        "speculative serving must be byte-identical to dense"
+    print(f"spec  : outputs byte-identical; "
+          f"{stats['spec_acceptance']:.0%} of drafts accepted "
+          f"({stats['spec_cycles']:.0f} cycles)")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Config registry: importing this package registers every architecture."""
 from repro.configs.base import (  # noqa: F401
-    ArchConfig, ShapeConfig, SHAPES, ASSIGNED_ARCHS,
+    ArchConfig, ShapeConfig, SHAPES, SPEC_VERIFY_CHUNK, ASSIGNED_ARCHS,
     cell_supported, get_config, list_archs, reduced, register,
 )
 

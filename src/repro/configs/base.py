@@ -193,9 +193,18 @@ SHAPES: dict[str, ShapeConfig] = {
                                     "paged_decode"),
     "paged_prefill_512": ShapeConfig("paged_prefill_512", 512, 8,
                                      "paged_prefill"),
+    # speculative verify: 8 tokens (1 sampled + 7 drafts) scored per slot
+    # in one multi-token pass against a 32k paged history (DESIGN.md §9)
+    "spec_verify_8": ShapeConfig("spec_verify_8", 32_768, 128,
+                                 "spec_verify"),
 }
 
-DECODE_KINDS = ("decode", "paged_decode", "paged_prefill")
+# verify chunk width of the spec_verify grid cell (the K of its name);
+# single source for the input spec (models/api.py) and the analytic
+# FLOPs model (benchmarks/roofline.py)
+SPEC_VERIFY_CHUNK = 8
+
+DECODE_KINDS = ("decode", "paged_decode", "paged_prefill", "spec_verify")
 
 
 def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
@@ -204,6 +213,10 @@ def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
         return False, "encoder-only arch has no decode step"
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, "pure full-attention arch cannot serve 500k ctx (see DESIGN.md)"
+    if shape.kind == "spec_verify" and (cfg.family == "ssm" or cfg.hybrid):
+        return False, ("speculative rollback drops KV cursor positions; "
+                       "recurrent SSM/conv state cannot be rewound "
+                       "(DESIGN.md §9 capability matrix)")
     return True, ""
 
 

@@ -19,6 +19,8 @@ Each cell lowers the *production* step function:
                      cache + block tables + per-slot positions)
   paged_prefill_* -> jit(paged_prefill_step) (serving engine: one chunked
                      prefill chunk per slot into the block pool)
+  spec_verify_*   -> jit(paged_verify_step)  (speculative decode: one
+                     multi-token verify pass, logits at every position)
 """
 import argparse
 import json
@@ -128,13 +130,15 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             lowered = jax.jit(
                 prefill_step, in_shardings=(params_sh, batch_sh),
             ).lower(params_sds, batch_sds)
-        elif shape.kind in ("paged_decode", "paged_prefill"):
-            # serving-engine steps over the paged block pool (DESIGN.md §8)
+        elif shape.kind in ("paged_decode", "paged_prefill", "spec_verify"):
+            # serving-engine steps over the paged block pool (DESIGN.md §8/§9)
             block_size = 64
             if shape.kind == "paged_decode":
                 spec = model.paged_decode_input_spec(shape, block_size)
-            else:
+            elif shape.kind == "paged_prefill":
                 spec = model.paged_prefill_input_spec(shape, block_size)
+            else:
+                spec = model.paged_verify_input_spec(shape, block_size)
             cache_sh = shardings_for(mesh, rules, model.paged_cache_axes(),
                                      spec["cache"])
             batch_sh = {
@@ -149,12 +153,15 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                         params, cache, tokens, positions, block_tables,
                         active)
                 order = ("tokens", "positions", "block_tables", "active")
-            else:
+            else:                  # paged_prefill / spec_verify: same ABI
+                chunk_fn = (model.paged_prefill_step
+                            if shape.kind == "paged_prefill"
+                            else model.paged_verify_step)
+
                 def paged_step(params, cache, tokens, positions, slots,
                                block_tables, valid):
-                    return model.paged_prefill_step(
-                        params, cache, tokens, positions, slots,
-                        block_tables, valid)
+                    return chunk_fn(params, cache, tokens, positions,
+                                    slots, block_tables, valid)
                 order = ("tokens", "positions", "slots", "block_tables",
                          "valid")
             lowered = jax.jit(

@@ -7,13 +7,20 @@ unchanged, it just compiles to fewer FLOPs (see DESIGN.md §8).
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --requests 16 --prompt-len 32 --gen 32 \
       --max-seqs 8 --block-size 16 --chunk-size 32 --prefill-budget 64 \
-      [--no-prefix-caching] [--prune-ratio 0.5] [--temperature 0.8]
+      [--no-prefix-caching] [--prune-ratio 0.5] [--temperature 0.8] \
+      [--spec-k 4 --draft-ratio 0.5]
 
 Prefill is chunked through ``paged_prefill_step`` (``--chunk-size`` tokens
 per step per slot, ``--prefill-budget`` tokens per step across slots;
 ``--chunk-size 0`` restores token-by-token prefill), and requests sharing
 a prompt prefix alias full KV blocks via refcounted prefix caching unless
 ``--no-prefix-caching``.
+
+``--spec-k K`` turns on lossless self-speculative decoding: the served
+model is SPA-pruned at ``--draft-ratio`` into a draft that proposes K
+tokens per cycle, verified in one multi-token target pass (outputs stay
+distribution-identical; see DESIGN.md §9).  SSM/hybrid families are
+capability-gated back to dense-only decode.
 
 ``generate`` (sequential, token-by-token) is kept as the correctness
 oracle the engine is tested against (tests/test_serve.py).
@@ -52,14 +59,20 @@ def generate(model, params, prompt: jax.Array, gen_len: int,
     return jnp.concatenate([prompt, jnp.stack(toks, 1)], axis=1)
 
 
-def build_engine(cfg, model, params, args):
+def build_engine(cfg, model, params, args, draft_model=None,
+                 draft_params=None):
     from repro.serve import Engine, ServeConfig
+    # K tokens of headroom: speculative reservation (num_cached + K + 1)
+    # must stay within per-seq capacity or tail cycles degrade to plain
+    # decode (DESIGN.md §9)
     return Engine(model, params, ServeConfig(
         max_seqs=args.max_seqs, block_size=args.block_size,
-        max_len=args.max_len or (args.prompt_len + args.gen),
+        max_len=args.max_len or (args.prompt_len + args.gen + args.spec_k),
         num_blocks=args.num_blocks, seed=args.seed,
         chunk_size=args.chunk_size, prefill_budget=args.prefill_budget,
-        prefix_caching=not args.no_prefix_caching))
+        prefix_caching=not args.no_prefix_caching,
+        spec_k=args.spec_k),
+        draft_model=draft_model, draft_params=draft_params)
 
 
 def main():
@@ -85,6 +98,10 @@ def main():
     ap.add_argument("--prune-ratio", type=float, default=0.0)
     ap.add_argument("--obspa", action="store_true",
                     help="prune with OBSPA (data-free) instead of SPA-L1")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative draft tokens per cycle (0 = off)")
+    ap.add_argument("--draft-ratio", type=float, default=0.5,
+                    help="SPA prune ratio for the speculative draft")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -108,13 +125,25 @@ def main():
         model, params = build(pr.cfg), pr.params
         print(f"serving pruned model: {pr.cfg.name}")
 
+    draft_model = draft_params = None
+    if args.spec_k > 0:
+        from repro.core.pruner import prune_model
+        dr = prune_model(model, params, args.draft_ratio, criterion="l1")
+        draft_model, draft_params = build(dr.cfg), dr.params
+        print(f"speculative draft: {dr.cfg.name} "
+              f"({dr.cfg.param_count()} params, K={args.spec_k})")
+
     # variable-length prompts: realistic continuous-batching traffic
     toks = batches(cfg, "id", 1, args.requests, args.prompt_len,
                    with_targets=False)[0]["tokens"]
     lens = [max(4, args.prompt_len - (i % 4) * (args.prompt_len // 8))
             for i in range(args.requests)]
 
-    engine = build_engine(cfg, model, params, args)
+    engine = build_engine(cfg, model, params, args, draft_model,
+                          draft_params)
+    if args.spec_k > 0 and not engine.spec_active:
+        print("speculative decoding gated off for this family "
+              "(recurrent state cannot be rewound; DESIGN.md §9)")
     t0 = time.time()
     for i in range(args.requests):
         engine.add_request([int(t) for t in toks[i, :lens[i]]],
@@ -130,6 +159,10 @@ def main():
           f"{stats['steps']:.0f} steps | "
           f"{stats['prefill_chunks']:.0f} prefill chunks | "
           f"mean ttft {stats['mean_ttft_s'] * 1e3:.1f}ms")
+    if engine.spec_active:
+        print(f"speculative: {stats['spec_cycles']:.0f} cycles | "
+              f"acceptance {stats['spec_acceptance']:.1%} "
+              f"({stats['spec_accepted']:.0f}/{stats['spec_proposed']:.0f})")
     first = out[min(out)]
     print("sample token ids:", first.tokens[:16])
 

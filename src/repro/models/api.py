@@ -78,6 +78,13 @@ class Model:
         return tf.paged_prefill_step(params, self.cfg, cache, tokens,
                                      positions, slots, block_tables, valid)
 
+    def paged_verify_step(self, params, cache, tokens, positions, slots,
+                          block_tables, valid):
+        """Multi-token scoring step for speculative decoding: logits at
+        every position (B, K+1, V), not just the last valid one."""
+        return tf.paged_verify_step(params, self.cfg, cache, tokens,
+                                    positions, slots, block_tables, valid)
+
     def paged_cache_axes(self) -> dict:
         return tf.paged_cache_axes(self.cfg)
 
@@ -175,6 +182,26 @@ class Model:
             "cache": self.paged_cache_spec(shape, block_size),
             "tokens": sds((B, C), jnp.int32),
             "positions": sds((B, C), jnp.int32),
+            "slots": sds((B,), jnp.int32),
+            "block_tables": sds((B, nb), jnp.int32),
+            "valid": sds((B,), jnp.int32),
+        }
+
+    def paged_verify_input_spec(self, shape: ShapeConfig,
+                                block_size: int = 64,
+                                chunk: int | None = None) -> dict:
+        """Speculative verify: ``chunk`` = K+1 scored tokens per sequence
+        against a shape.seq_len-deep paged history (unlike prefill, the
+        chunk width and the context depth are independent axes here)."""
+        from repro.configs.base import SPEC_VERIFY_CHUNK
+        chunk = chunk or SPEC_VERIFY_CHUNK
+        B, S = shape.global_batch, shape.seq_len
+        nb = -(-S // block_size)
+        sds = jax.ShapeDtypeStruct
+        return {
+            "cache": self.paged_cache_spec(shape, block_size),
+            "tokens": sds((B, chunk), jnp.int32),
+            "positions": sds((B, chunk), jnp.int32),
             "slots": sds((B,), jnp.int32),
             "block_tables": sds((B, nb), jnp.int32),
             "valid": sds((B,), jnp.int32),

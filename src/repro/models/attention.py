@@ -159,6 +159,25 @@ def attention_decode(params: dict, cfg, x: jax.Array, pos: jax.Array,
     return out, KVCache(ck, cv)
 
 
+def _scatter_kv(k_pool, v_pool, k_new, v_new, block_tables, positions,
+                inchunk=None):
+    """Scatter per-token K/V (B, C, KH, hd) into the pool blocks their
+    absolute ``positions`` (B, C) map to through ``block_tables`` (B, NB).
+    ``inchunk`` (B, C) bool masks padding: masked tokens (and positions
+    pointing past the table) are redirected to the reserved null block 0,
+    where writes are harmless by construction.  Shared by the paged
+    decode, chunked-prefill and speculative-verify paths, so the "where
+    does a token's KV land" rule exists exactly once."""
+    bs, NB = k_pool.shape[1], block_tables.shape[1]
+    blk_idx = jnp.clip(positions // bs, 0, NB - 1)
+    blk = jnp.take_along_axis(block_tables, blk_idx, axis=1)
+    off = positions % bs
+    if inchunk is not None:
+        blk = jnp.where(inchunk, blk, 0)
+        off = jnp.where(inchunk, off, 0)
+    return k_pool.at[blk, off].set(k_new), v_pool.at[blk, off].set(v_new)
+
+
 def attention_paged_decode(params: dict, cfg, x: jax.Array,
                            positions: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_tables: jax.Array,
@@ -177,13 +196,9 @@ def attention_paged_decode(params: dict, cfg, x: jax.Array,
     from repro.kernels.paged_attention import paged_attention
 
     B = x.shape[0]
-    bs = k_pool.shape[1]
     q, k_new, v_new = _qkv(params, cfg, x, positions[:, None])
-    blk = jnp.take_along_axis(block_tables, (positions // bs)[:, None],
-                              axis=1)[:, 0]
-    off = positions % bs
-    k_pool = k_pool.at[blk, off].set(k_new[:, 0])
-    v_pool = v_pool.at[blk, off].set(v_new[:, 0])
+    k_pool, v_pool = _scatter_kv(k_pool, v_pool, k_new, v_new,
+                                 block_tables, positions[:, None])
     qf = q.reshape(B, q.shape[2] * q.shape[3], q.shape[4])
     o = paged_attention(qf, k_pool, v_pool, block_tables, positions + 1,
                         window=window, use_kernel=cfg.use_pallas)
@@ -199,29 +214,25 @@ def attention_paged_prefill(params: dict, cfg, x: jax.Array,
                             ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Chunked-prefill attention over the paged KV pool.
 
-    x (B, C, d) — a fixed-size chunk of known tokens per sequence, right-
-    padded; positions (B, C) absolute write indices (``chunk_start +
-    arange(C)``); valid (B,) real-token counts.  K/V of the valid tokens
-    are scattered into the pool blocks their positions map to (padding
-    scatters into the reserved null block 0), then the chunk's queries
-    attend causally over the *pool* history — which includes any prefix
-    blocks aliased in by prefix caching.  window as in
+    x (B, C, d) — a fixed-size chunk of tokens per sequence, right-padded;
+    positions (B, C) absolute write indices (``chunk_start + arange(C)``);
+    valid (B,) real-token counts.  K/V of the valid tokens are scattered
+    into the pool blocks their positions map to (padding scatters into
+    the reserved null block 0), then the chunk's queries attend causally
+    over the *pool* history — which includes any prefix blocks aliased in
+    by prefix caching.  The per-row absolute-position masking makes the
+    same path serve speculative verify chunks (``[sampled token, K
+    drafts]``): each drafted query sees exactly the history a one-token
+    decode at its position would see.  window as in
     ``attention_paged_decode``.  Returns (out (B, C, d), new pools).
     """
     from repro.kernels.paged_attention import paged_prefill_attention
 
     B, C, _ = x.shape
-    bs, NB = k_pool.shape[1], block_tables.shape[1]
     q, k_new, v_new = _qkv(params, cfg, x, positions)
     inchunk = jnp.arange(C)[None, :] < valid[:, None]
-    # padded positions may point past the table; clip before the gather
-    # (their writes are redirected to the null block anyway)
-    blk_idx = jnp.clip(positions // bs, 0, NB - 1)
-    blk = jnp.where(inchunk, jnp.take_along_axis(block_tables, blk_idx,
-                                                 axis=1), 0)
-    off = jnp.where(inchunk, positions % bs, 0)
-    k_pool = k_pool.at[blk, off].set(k_new)
-    v_pool = v_pool.at[blk, off].set(v_new)
+    k_pool, v_pool = _scatter_kv(k_pool, v_pool, k_new, v_new,
+                                 block_tables, positions, inchunk)
     qf = q.reshape(B, C, q.shape[2] * q.shape[3], q.shape[4])
     o = paged_prefill_attention(
         qf, k_pool, v_pool, block_tables, positions[:, 0],

@@ -492,22 +492,15 @@ def paged_decode_step(params: dict, cfg: ArchConfig, cache: dict,
     return logits_from_hidden(params, cfg, h)[:, 0], new_cache
 
 
-def paged_prefill_step(params: dict, cfg: ArchConfig, cache: dict,
-                       tokens: jax.Array, positions: jax.Array,
-                       slots: jax.Array, block_tables: jax.Array,
-                       valid: jax.Array) -> tuple[jax.Array, dict]:
-    """Chunked prefill: push a fixed-size chunk of known tokens through the
-    layer stack, scattering K/V into the paged pool and advancing the
-    recurrent SSM state — O(P/chunk) engine steps for a P-token prompt
-    instead of the O(P) token-by-token warmup.
-
-    tokens (B, C) int32, right-padded; positions (B, C) absolute indices
-    (``num_cached + arange(C)``); slots (B,) int32 rows of the per-slot
-    SSM state tensors; block_tables (B, NB); valid (B,) real-token counts.
-    Returns (logits of each sequence's last valid token (B, V), cache) —
-    the engine samples from them when the chunk covers the last known
-    token.
-    """
+def _paged_chunk_forward(params: dict, cfg: ArchConfig, cache: dict,
+                         tokens: jax.Array, positions: jax.Array,
+                         slots: jax.Array, block_tables: jax.Array,
+                         valid: jax.Array) -> tuple[jax.Array, dict]:
+    """Shared core of chunked prefill and speculative verify: push a
+    fixed-width chunk of tokens per sequence through the layer stack,
+    scattering K/V of the valid tokens into the paged pool (padding lands
+    in the null block) and advancing the recurrent SSM state through the
+    valid prefix.  Returns (hidden (B, C, d), new cache)."""
     x = jnp.take(params["tok_embed"], tokens, axis=0)           # (B,C,d)
     B = tokens.shape[0]
     fresh = positions[:, 0] == 0      # first chunk: reset recurrent state
@@ -532,10 +525,58 @@ def paged_prefill_step(params: dict, cfg: ArchConfig, cache: dict,
         return delta, ssm_mod.SSMCache(lc["conv"].at[slots].set(new_sc.conv),
                                        lc["state"].at[slots].set(new_sc.state))
 
-    h, new_cache = _run_decode_layers(params, cfg, cache, x, attn_fn, ssm_fn)
+    return _run_decode_layers(params, cfg, cache, x, attn_fn, ssm_fn)
+
+
+def paged_prefill_step(params: dict, cfg: ArchConfig, cache: dict,
+                       tokens: jax.Array, positions: jax.Array,
+                       slots: jax.Array, block_tables: jax.Array,
+                       valid: jax.Array) -> tuple[jax.Array, dict]:
+    """Chunked prefill: push a fixed-size chunk of known tokens through the
+    layer stack, scattering K/V into the paged pool and advancing the
+    recurrent SSM state — O(P/chunk) engine steps for a P-token prompt
+    instead of the O(P) token-by-token warmup.
+
+    tokens (B, C) int32, right-padded; positions (B, C) absolute indices
+    (``num_cached + arange(C)``); slots (B,) int32 rows of the per-slot
+    SSM state tensors; block_tables (B, NB); valid (B,) real-token counts.
+    Returns (logits of each sequence's last valid token (B, V), cache) —
+    the engine samples from them when the chunk covers the last known
+    token.
+    """
+    h, new_cache = _paged_chunk_forward(params, cfg, cache, tokens,
+                                        positions, slots, block_tables,
+                                        valid)
     h_last = jnp.take_along_axis(
         h, jnp.maximum(valid - 1, 0)[:, None, None], axis=1)    # (B,1,d)
     return logits_from_hidden(params, cfg, h_last)[:, 0], new_cache
+
+
+def paged_verify_step(params: dict, cfg: ArchConfig, cache: dict,
+                      tokens: jax.Array, positions: jax.Array,
+                      slots: jax.Array, block_tables: jax.Array,
+                      valid: jax.Array) -> tuple[jax.Array, dict]:
+    """Speculative-verify scoring step: one multi-token pass that returns
+    the target model's logits at *every* drafted position.
+
+    Same contract as ``paged_prefill_step`` — tokens (B, K+1) are
+    ``[last sampled token, K drafted tokens]`` per sequence, right-padded,
+    with ``valid`` counting the real ones — but the full (B, K+1, V)
+    logits come back, so the engine can accept/reject each draft against
+    the exact distribution a token-by-token decode would have produced.
+    K/V for all valid positions (including drafts that end up rejected)
+    are scattered into the pool; rejection rolls the write cursor back on
+    the host and the stale entries are overwritten by the next write
+    (kv_cache.truncate).
+
+    Recurrent SSM/conv state advances through all valid tokens and cannot
+    be rewound the same way, which is why the engine gates speculation to
+    attention-only families (DESIGN.md §9 capability matrix).
+    """
+    h, new_cache = _paged_chunk_forward(params, cfg, cache, tokens,
+                                        positions, slots, block_tables,
+                                        valid)
+    return logits_from_hidden(params, cfg, h), new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,6 @@
 """Continuous-batching inference engine over the paged KV/SSM cache.
 
-Two jit-compiled device functions serve every in-flight request:
+Jit-compiled device functions serve every in-flight request:
 
   - a batched *decode* step of fixed shape (max_seqs,): slots in decode
     feed their last sample; slots that are idle or mid-prefill ride along
@@ -10,28 +10,39 @@ Two jit-compiled device functions serve every in-flight request:
     chunk of known tokens through ``forward``-style attention, scattering
     K/V straight into its pool blocks — O(P/chunk) engine steps per
     P-token prompt instead of the O(P) token-by-token warmup, which is
-    what collapses time-to-first-token (benchmarks/serving.py).
+    what collapses time-to-first-token (benchmarks/serving.py);
+  - with speculative decoding on (``spec_k > 0`` plus a draft model), a
+    *draft* loop of K pruned-model decode steps fused into one call and a
+    *verify* step of fixed shape (max_seqs, K+1) that scores every
+    drafted position with the dense target in a single multi-token pass
+    (``paged_verify_step``), accepting drafts by exact match (greedy) or
+    rejection sampling (temperature) so outputs remain
+    distribution-identical to the dense-only engine (DESIGN.md §9).
 
-One engine step may mix both (continuous batching): the scheduler plans
-prefill chunks under ``prefill_budget`` tokens per step so decode latency
-stays bounded while prompts stream in.  ``chunk_size=0`` restores the
-legacy token-by-token prefill exactly.
+One engine step may mix all of these (continuous batching): the
+scheduler plans prefill chunks and speculative cycles under a shared
+per-step token budget so decode latency stays bounded while prompts
+stream in.  ``chunk_size=0`` restores the legacy token-by-token prefill
+exactly; ``spec_k=0`` the dense-only decode.
+
+Self-speculative decoding is the pruning loop closed: the SPA/OBSPA-
+pruned model shares the dense model's vocabulary, so it is a free draft.
+Draft and target each own a device block *pool*, but share one host-side
+allocator/block-table — both write a sequence's KV at the same pool
+coordinates, so admission, growth, COW and preemption stay single-
+sourced.  Rejected drafts roll back by cursor (``PagedCache.truncate``);
+recurrent SSM/conv state cannot be rewound that way, so SSM/hybrid
+families are capability-gated back to dense-only decode.
 
 Prefix caching (``prefix_caching``, attention-only families) aliases
 cached full blocks into new requests' tables; the scheduler hands back
-copy-on-write (src, dst) pool copies which the engine runs as a third
-jitted function before the step.  SSM/hybrid families keep recurrent
-per-token state that block aliasing cannot reconstruct, so the engine
-silently disables prefix caching for them (chunked prefill still applies).
+copy-on-write (src, dst) pool copies which the engine runs on device
+(on both pools in spec mode) before the step.
 
-Dense and SPA/OBSPA-pruned models go through the same code path — a
-pruned model is a plain smaller ``ArchConfig``, so serving it is just
-building the engine on the pruned config/params (the paper's "direct
-computational benefit" made measurable; benchmarks/serving.py).
-
-Sampling: per-request temperature, 0 = greedy argmax; both resolved
-inside the jitted steps so host<->device traffic per step is one small
-token transfer each way.
+Host<->device traffic is one batched transfer per step: every sampled
+token, acceptance count and prefill logit the host needs is fetched in a
+single ``jax.device_get`` (``stats["host_syncs"]``; asserted in
+tests/test_serve_spec.py).
 """
 from __future__ import annotations
 
@@ -58,6 +69,7 @@ class ServeConfig:
     chunk_size: int = 32              # prefill chunk; 0/1 -> token-by-token
     prefill_budget: int = 0           # max prefill tokens/step (0 = no cap)
     prefix_caching: bool = True       # share full blocks across prefixes
+    spec_k: int = 0                   # draft tokens per speculative cycle
 
     @property
     def blocks_per_seq(self) -> int:
@@ -78,10 +90,13 @@ class FinishedRequest:
     preemptions: int
     steps: int                        # engine steps, first admission -> finish
     ttft_s: float = 0.0               # submission -> first sampled token
+    spec_proposed: int = 0            # draft tokens offered to verification
+    spec_accepted: int = 0            # draft tokens the target accepted
 
 
 class Engine:
-    def __init__(self, model, params, cfg: ServeConfig | None = None):
+    def __init__(self, model, params, cfg: ServeConfig | None = None,
+                 draft_model=None, draft_params=None):
         if not model.cfg.has_decode:
             raise ValueError(f"{model.cfg.name} has no decode path")
         if model.cfg.family == "vlm":
@@ -102,6 +117,25 @@ class Engine:
         self._prefix_ok = (self.cfg.prefix_caching
                            and model.cfg.family != "ssm"
                            and not model.cfg.hybrid)
+        # speculative decoding capability gate: rejected drafts roll back
+        # by dropping KV cursor positions; recurrent SSM/conv state has no
+        # such rewind, so SSM/hybrid fall back to dense-only decode
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+        self.spec_active = (self.cfg.spec_k > 0 and draft_model is not None
+                            and model.cfg.family != "ssm"
+                            and not model.cfg.hybrid)
+        if self.spec_active:
+            if draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError("draft/target vocabularies differ")
+            self.draft_cache = draft_model.init_paged_cache(
+                num_blocks=self.cfg.pool_blocks(),
+                block_size=self.cfg.block_size,
+                max_seqs=self.cfg.max_seqs)
+            self._draft_fn = jax.jit(self._draft_impl, donate_argnums=(1,))
+            self._verify_fn = jax.jit(self._verify_impl, donate_argnums=(1,))
+            self._draft_prefill_fn = jax.jit(self._draft_prefill_impl,
+                                             donate_argnums=(1,))
         self.reset()
 
     def reset(self) -> None:
@@ -122,6 +156,10 @@ class Engine:
         self._prefill_tokens = 0
         self._prefill_chunks = 0
         self._cow_copies = 0
+        self._host_syncs = 0
+        self._spec_cycles = 0
+        self._spec_proposed = 0
+        self._spec_accepted = 0
         self._admit_step: dict[int, int] = {}
         self._finish_step: dict[int, int] = {}
         self._submit_wall: dict[int, float] = {}
@@ -146,11 +184,127 @@ class Engine:
             params, cache, tokens, positions, slots, block_tables, valid)
         return self._sample(logits, temps, key), cache
 
+    def _draft_prefill_impl(self, params, cache, tokens, positions, slots,
+                            block_tables, valid):
+        """Spec mode: the draft pool needs the prompt's KV too (the draft
+        attends over its own history); logits are discarded."""
+        _, cache = self.draft_model.paged_prefill_step(
+            params, cache, tokens, positions, slots, block_tables, valid)
+        return cache
+
     def _cow_impl(self, cache, src, dst):
         for name in ("k", "v"):
             if name in cache:
                 cache[name] = cache[name].at[:, dst].set(cache[name][:, src])
         return cache
+
+    def _dist(self, logits, temps):
+        """The distribution ``_sample`` actually samples from: softmax at
+        temperature, a one-hot argmax at 0 (so the rejection-sampling
+        identity also covers greedy exact-match acceptance)."""
+        lf = logits.astype(jnp.float32)
+        t = jnp.maximum(temps, 1e-6)[..., None]
+        soft = jax.nn.softmax(lf / t, axis=-1)
+        hard = jax.nn.one_hot(jnp.argmax(lf, -1), lf.shape[-1],
+                              dtype=jnp.float32)
+        return jnp.where(temps[..., None] > 0, soft, hard)
+
+    def _draft_impl(self, params, cache, forced, known_len, start_pos,
+                    block_tables, active, temps, key):
+        """K pruned-model decode steps fused into one device call.
+
+        forced (B, K): known tokens to feed first — normally just the
+        last sampled token (known_len == 1), plus catch-up tokens when
+        the draft pool lags the target's cursor (the full-acceptance KV
+        gap, DESIGN.md §9).  Step i feeds ``forced[:, i]`` while
+        i < known_len, else its own previous sample; every step writes
+        draft KV at ``start_pos + i``.  Returns the K candidate tokens
+        (right-aligned from the step that consumed the last known token;
+        positions past ``K - known_len + 1`` are padding the verify mask
+        discards), their proposal distributions q (B, K, V), and cache.
+        """
+        B, K = forced.shape
+        prev = forced[:, 0]
+        cands, qs = [], []
+        for i in range(K):
+            tok = jnp.where(jnp.int32(i) < known_len, forced[:, i], prev)
+            logits, cache = self.draft_model.paged_decode_step(
+                params, cache, tok, start_pos + jnp.int32(i), block_tables,
+                active)
+            key, sub = jax.random.split(key)
+            nxt = self._sample(logits, temps, sub)
+            cands.append(nxt)
+            qs.append(self._dist(logits, temps))
+            prev = nxt
+        cand = jnp.stack(cands, 1)                          # (B, K)
+        q = jnp.stack(qs, 1)                                # (B, K, V)
+        # candidates begin at the step that fed the last known token
+        idx = jnp.clip((known_len - 1)[:, None] + jnp.arange(K)[None],
+                       0, K - 1)
+        cand = jnp.take_along_axis(cand, idx, axis=1)
+        q = jnp.take_along_axis(q, idx[..., None], axis=1)
+        return cand, q, cache
+
+    def _verify_impl(self, params, cache, base_tok, cand, qprobs,
+                     positions0, slots, block_tables, valid, ncand, temps,
+                     key):
+        """One multi-token target pass over ``[base token, drafts]``, then
+        exact speculative acceptance.
+
+        The K verify rows feed ``[base, c_1 .. c_{K-1}]``: row j's logits
+        are the target's distribution for sequence position
+        ``positions0 + j + 1`` — exactly what a token-by-token decode
+        would have sampled from — and score candidate c_{j+1}.  (The last
+        candidate's own KV is not written this cycle; if accepted it
+        becomes the next cycle's base row.  No "bonus" token is emitted
+        on full acceptance — emitting it would leave the draft pool one
+        position behind, halving the next cycle's candidates; deferring
+        it to the next verify row 0 samples from the identical target
+        distribution, so losslessness is untouched.)
+
+        Candidate j is accepted with probability min(1, p(c)/q(c))
+        (greedy: p and q are one-hots, so this is exact match); the first
+        rejection resamples from norm(max(p - q, 0)) (Leviathan et
+        al.-style, so outputs stay distribution-identical to the
+        dense-only engine).  Rows with ``ncand == 0`` are plain decodes
+        riding the verify batch: they emit row 0's target sample.
+
+        Returns (out_tokens (B, K): accepted drafts then the replacement
+        or plain-decode sample, n_acc (B,), cache).
+        """
+        B, K = cand.shape
+        tokens = jnp.concatenate([base_tok[:, None], cand[:, :K - 1]],
+                                 axis=1)                    # (B, K)
+        positions = positions0[:, None] + jnp.arange(K, dtype=jnp.int32)[None]
+        logits, cache = self.model.paged_verify_step(
+            params, cache, tokens, positions, slots, block_tables, valid)
+        p = self._dist(logits, temps[:, None])              # (B, K, V)
+
+        pc = jnp.take_along_axis(p, cand[..., None], -1)[..., 0]
+        qc = jnp.take_along_axis(qprobs, cand[..., None], -1)[..., 0]
+        k_acc, k_res, k_plain = jax.random.split(key, 3)
+        u = jax.random.uniform(k_acc, (B, K))
+        real = jnp.arange(K)[None] < ncand[:, None]
+        ok = (u < pc / jnp.maximum(qc, 1e-30)) & real
+        n_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+
+        # residual distribution at the first rejected position; for plain
+        # rows (ncand == 0) q is never consulted — row 0's plain target
+        # sample is emitted instead
+        res = jnp.maximum(p - qprobs, 0.0)
+        res = res / jnp.maximum(res.sum(-1, keepdims=True), 1e-30)
+        rep = jnp.where(
+            temps[:, None] > 0,
+            jax.random.categorical(k_res, jnp.log(res + 1e-30), axis=-1),
+            jnp.argmax(p, -1)).astype(jnp.int32)            # (B, K)
+        plain = self._sample(logits[:, 0], temps, k_plain)
+        rep_at = jnp.take_along_axis(
+            rep, jnp.clip(n_acc, 0, K - 1)[:, None], 1)[:, 0]
+        fill = jnp.where(ncand == 0, plain, rep_at)
+        j = jnp.arange(K, dtype=jnp.int32)[None]
+        out = jnp.where(j < n_acc[:, None], cand,
+                        jnp.where(j == n_acc[:, None], fill[:, None], 0))
+        return out, n_acc, cache
 
     # ----- public API -----
     def add_request(self, prompt: Iterable[int], max_new_tokens: int = 32,
@@ -175,11 +329,19 @@ class Engine:
         if s.done:
             self._finish_step[s.req.rid] = self._steps + 1
 
+    def _fetch(self, tree):
+        """The step's single device->host synchronization point: one
+        batched transfer of every value the host needs this step."""
+        self._host_syncs += 1
+        return jax.device_get(tree)
+
     def step(self) -> list[RequestState]:
-        """One engine step: schedule, run prefill chunks + the decode
-        batch, fold results back."""
+        """One engine step: schedule, run prefill chunks + the decode (or
+        draft/verify) batch, fetch the results in one transfer, fold
+        them back."""
+        spec_k = self.cfg.spec_k if self.spec_active else 0
         plan = self.scheduler.plan_step(self.cfg.chunk_size,
-                                        self.cfg.prefill_budget)
+                                        self.cfg.prefill_budget, spec_k)
         running = plan.decode + [s for s, _ in plan.prefill]
         for s in running:
             self._admit_step.setdefault(s.req.rid, self._steps)
@@ -189,7 +351,13 @@ class Engine:
         for src, dst in plan.copies:          # copy-on-write pool copies
             self.cache = self._cow_fn(self.cache, np.int32(src),
                                       np.int32(dst))
+            if spec_k:
+                self.draft_cache = self._cow_fn(
+                    self.draft_cache, np.int32(src), np.int32(dst))
             self._cow_copies += 1
+
+        fetch: dict[str, Any] = {}            # one device_get at the end
+        sampled_prefills: list[RequestState] = []
 
         C = self.cfg.chunk_size
         for s, n in plan.prefill:
@@ -197,20 +365,27 @@ class Engine:
             toks = np.zeros((1, C), np.int32)
             toks[0, :n] = seq[s.num_cached:s.num_cached + n]
             pos = s.num_cached + np.arange(C, dtype=np.int32)[None]
+            args = (jnp.asarray(toks), jnp.asarray(pos),
+                    jnp.asarray([s.slot], np.int32),
+                    jnp.asarray(self.cache_host.tables[s.slot][None]),
+                    jnp.asarray([n], np.int32))
             self._key, sub = jax.random.split(self._key)
             nxt, self.cache = self._prefill_fn(
-                self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-                jnp.asarray([s.slot], np.int32),
-                jnp.asarray(self.cache_host.tables[s.slot][None]),
-                jnp.asarray([n], np.int32),
+                self.params, self.cache, *args,
                 jnp.asarray([s.req.temperature], np.float32), sub)
+            if spec_k:                        # keep the draft pool in step
+                self.draft_cache = self._draft_prefill_fn(
+                    self.draft_params, self.draft_cache, *args)
+                s.draft_cached = s.num_cached + n
             covered_last = s.num_cached + n == s.seq_len
             s.num_cached += n
             self._prefill_chunks += 1
             self._prefill_tokens += n - (1 if covered_last else 0)
             if covered_last:                  # chunk saw the last known token
-                self._append_sample(s, int(np.asarray(nxt)[0]))
+                fetch[f"p{len(sampled_prefills)}"] = nxt
+                sampled_prefills.append(s)
 
+        spec_meta: list[tuple[RequestState, int, int]] = []
         if plan.decode:
             B = self.cfg.max_seqs
             tokens = np.zeros((B,), np.int32)
@@ -225,24 +400,111 @@ class Engine:
             # inactive slots write into the null block, not their tables
             tables = np.where(active[:, None], self.cache_host.tables, 0)
 
-            self._key, sub = jax.random.split(self._key)
-            nxt, self.cache = self._step_fn(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(positions), jnp.asarray(tables),
-                jnp.asarray(temps), jnp.asarray(active), sub)
-            nxt = np.asarray(nxt)
+            if spec_k and plan.spec:
+                fetch["out"], fetch["acc"] = self._spec_decode(
+                    plan, tokens, positions, temps, active, tables,
+                    spec_meta)
+            else:
+                self._key, sub = jax.random.split(self._key)
+                nxt, self.cache = self._step_fn(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(positions), jnp.asarray(tables),
+                    jnp.asarray(temps), jnp.asarray(active), sub)
+                fetch["dec"] = nxt
 
+        vals = self._fetch(fetch) if fetch else {}
+
+        for i, s in enumerate(sampled_prefills):
+            self._append_sample(s, int(vals[f"p{i}"][0]))
+
+        if "dec" in vals:
             for s in plan.decode:
                 was_last_known = s.num_cached == s.seq_len - 1
                 s.num_cached += 1
                 if not was_last_known:        # still streaming known tokens
                     self._prefill_tokens += 1
                     continue
-                self._append_sample(s, int(nxt[s.slot]))
+                self._append_sample(s, int(vals["dec"][s.slot]))
+        elif "out" in vals:
+            self._fold_spec(plan, vals["out"], vals["acc"], spec_meta)
 
         self._steps += 1
         self.scheduler.commit_progress()      # register newly-full blocks
         return running
+
+    def _spec_decode(self, plan, tokens, positions, temps, active, tables,
+                     spec_meta):
+        """Device calls for one speculative cycle: the fused K-step draft
+        loop, then the single multi-token verify.  Returns the device
+        arrays (out_tokens, n_acc) for the step's batched fetch."""
+        B, K = self.cfg.max_seqs, self.cfg.spec_k
+        forced = np.zeros((B, K), np.int32)
+        known_len = np.ones((B,), np.int32)
+        start_pos = positions.copy()
+        draft_active = np.zeros((B,), bool)
+        valid = active.astype(np.int32)       # plain decode rows: 1 row
+        ncand = np.zeros((B,), np.int32)
+        for s in plan.spec:
+            seq = s.seq
+            gap = s.num_cached - s.draft_cached
+            kl = min(gap + 1, K)
+            forced[s.slot, :kl] = seq[s.draft_cached:s.draft_cached + kl]
+            known_len[s.slot] = kl
+            start_pos[s.slot] = s.draft_cached
+            draft_active[s.slot] = True
+            m = max(0, K - gap)               # candidates this cycle
+            ncand[s.slot] = m
+            valid[s.slot] = max(1, m)         # verify rows consumed
+            spec_meta.append((s, m, K))
+
+        self._key, k_draft, k_verify = jax.random.split(self._key, 3)
+        cand, qprobs, self.draft_cache = self._draft_fn(
+            self.draft_params, self.draft_cache, jnp.asarray(forced),
+            jnp.asarray(known_len), jnp.asarray(start_pos),
+            jnp.asarray(tables), jnp.asarray(draft_active),
+            jnp.asarray(temps), k_draft)
+        out, n_acc, self.cache = self._verify_fn(
+            self.params, self.cache, jnp.asarray(tokens), cand, qprobs,
+            jnp.asarray(positions), jnp.asarray(
+                np.arange(B, dtype=np.int32)),
+            jnp.asarray(tables), jnp.asarray(valid), jnp.asarray(ncand),
+            jnp.asarray(temps), k_verify)
+        self._spec_cycles += 1
+        return out, n_acc
+
+    def _fold_spec(self, plan, out, n_acc, spec_meta):
+        """Fold one speculative cycle back into request state: append the
+        accepted tokens + the replacement/bonus token, advance cursors,
+        roll rejected KV positions back in the host block tables."""
+        drafted = {s.req.rid: (n_cand, k) for s, n_cand, k in spec_meta}
+        for s in plan.decode:
+            a = int(n_acc[s.slot])
+            n_cand, k = drafted.get(s.req.rid, (0, 0))
+            assert a <= n_cand
+            was_decode = s.num_cached == s.seq_len - 1
+            if not was_decode:                # legacy token-by-token prefill
+                s.num_cached += 1
+                self._prefill_tokens += 1
+                continue
+            draft_start = s.draft_cached
+            # the a accepted drafts, plus the rejection replacement (or
+            # the plain-decode sample); full acceptance emits exactly a —
+            # the would-be bonus arrives as the next cycle's row 0
+            emit = a + (1 if (a < n_cand or n_cand == 0) else 0)
+            for j in range(emit):
+                s.num_cached += 1
+                self._append_sample(s, int(out[s.slot, j]))
+                if s.done:
+                    break
+            if k:
+                s.draft_cached = min(draft_start + k, s.num_cached)
+                s.spec_proposed += n_cand
+                s.spec_accepted += a
+                self._spec_proposed += n_cand
+                self._spec_accepted += a
+                # rollback: rejected speculative positions release their
+                # surplus blocks; the commit cursor rewinds with them
+                self.cache_host.truncate(s.slot, s.num_cached)
 
     def run(self, requests: Iterable[dict[str, Any]] | None = None
             ) -> tuple[dict[int, FinishedRequest], dict[str, float]]:
@@ -253,6 +515,9 @@ class Engine:
         # snapshot so repeated run() calls report THIS drain only
         steps0, dec0, pre0 = self._steps, self._decode_tokens, \
             self._prefill_tokens
+        prop0, acc0 = self._spec_proposed, self._spec_accepted
+        cyc0, sync0 = self._spec_cycles, self._host_syncs
+        chunk0, cow0 = self._prefill_chunks, self._cow_copies
         fin0 = len(self.scheduler.finished)
         t0 = time.time()
         while self.scheduler.has_work:
@@ -273,9 +538,13 @@ class Engine:
                 preemptions=s.preemptions,
                 steps=(self._finish_step.get(rid, self._steps)
                        - self._admit_step.get(rid, 0)),
-                ttft_s=ttft)
+                ttft_s=ttft,
+                spec_proposed=s.spec_proposed,
+                spec_accepted=s.spec_accepted)
         dec = self._decode_tokens - dec0
         pre = self._prefill_tokens - pre0
+        prop = self._spec_proposed - prop0
+        acc = self._spec_accepted - acc0
         stats = {
             "wall_s": dt,
             "steps": float(self._steps - steps0),
@@ -283,8 +552,13 @@ class Engine:
             "prefill_tokens": float(pre),
             "decode_tok_per_s": dec / max(dt, 1e-9),
             "total_tok_per_s": (dec + pre) / max(dt, 1e-9),
-            "prefill_chunks": float(self._prefill_chunks),
-            "cow_copies": float(self._cow_copies),
+            "prefill_chunks": float(self._prefill_chunks - chunk0),
+            "cow_copies": float(self._cow_copies - cow0),
+            "host_syncs": float(self._host_syncs - sync0),
+            "spec_cycles": float(self._spec_cycles - cyc0),
+            "spec_proposed": float(prop),
+            "spec_accepted": float(acc),
+            "spec_acceptance": acc / prop if prop else 0.0,
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
         }
         return out, stats

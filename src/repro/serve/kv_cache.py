@@ -31,6 +31,16 @@ into a matched block is the re-fed last known token when a prefix hit
 covers the entire sequence (the model must still *see* that token to
 produce logits); ``prepare_write`` detects ref>1 blocks in the write
 range and hands the engine (src, dst) pool copies to run on device.
+
+Speculative append/rollback (DESIGN.md §9): a speculative decode cycle
+grows a slot by K+1 tokens up front (``ensure``), writes drafted K/V into
+the reserved range, and after verification rolls the rejected suffix back
+with ``truncate`` — surplus blocks return through the same
+decref/retain path as ``release``, and a prefix-index entry whose block
+is about to be partially rewritten (ref == 1, content now past the new
+length) is dropped so the index never describes overwritten KV.  A
+*shared* boundary block keeps its entry: the donors still hold that
+content, and the slot's next write COWs via ``prepare_write``.
 """
 from __future__ import annotations
 
@@ -173,8 +183,10 @@ class PagedCache:
         # prefix index: chained content hash <-> pool block (full blocks only)
         self._block_of: dict[int, int] = {}          # hash  -> block
         self._hash_of: dict[int, int] = {}           # block -> hash
-        # per-slot (committed full blocks, last committed hash)
-        self._committed: list[tuple[int, int]] = [(0, 0)] * self.max_seqs
+        # per-slot committed chain: hash of each full block registered so
+        # far (a list, not just the tip, so speculative rollback can rewind
+        # the commit cursor block by block)
+        self._chain: list[list[int]] = [[] for _ in range(self.max_seqs)]
 
     @property
     def max_len(self) -> int:
@@ -204,7 +216,28 @@ class PagedCache:
             self.allocator.decref(b, retain=b in self._hash_of)
         self._owned[slot] = []
         self.tables[slot] = 0
-        self._committed[slot] = (0, 0)
+        self._chain[slot] = []
+
+    def truncate(self, slot: int, n_tokens: int) -> None:
+        """Speculative rollback: shrink the slot to cover ``n_tokens``
+        (rejected drafted positions are simply abandoned — the pool KV
+        there is garbage that the next write overwrites).  Surplus blocks
+        release exactly like ``release`` (retained when prefix-indexed);
+        a kept block that was registered but whose content now extends
+        past ``n_tokens`` is unregistered if this slot is its only owner
+        (its KV is about to be rewritten); if it is shared, the entry
+        survives — donors keep the content and our next write COWs."""
+        keep = self.blocks_for(n_tokens)
+        full = n_tokens // self.block_size
+        for b in self._owned[slot][keep:]:
+            self.allocator.decref(b, retain=b in self._hash_of)
+        self._owned[slot] = self._owned[slot][:keep]
+        self.tables[slot, keep:] = 0
+        for bi in range(full, keep):
+            b = self._owned[slot][bi]
+            if b in self._hash_of and self.allocator.ref(b) == 1:
+                self._forget_block(b)
+        self._chain[slot] = self._chain[slot][:full]
 
     def owned(self, slot: int) -> list[int]:
         return list(self._owned[slot])
@@ -225,6 +258,7 @@ class PagedCache:
         bs = self.block_size
         h = 0
         matched: list[int] = []
+        hashes: list[int] = []
         while (len(matched) + 1) * bs <= len(tokens):
             i = len(matched)
             h2 = _chain_hash(h, tuple(tokens[i * bs:(i + 1) * bs]))
@@ -233,11 +267,12 @@ class PagedCache:
                 break
             self.allocator.incref(b)
             matched.append(b)
+            hashes.append(h2)
             h = h2
         if matched:
             self._owned[slot] = matched
             self.tables[slot, :len(matched)] = matched
-            self._committed[slot] = (len(matched), h)
+            self._chain[slot] = hashes
         return len(matched) * bs
 
     def commit(self, slot: int, tokens: tuple[int, ...]) -> None:
@@ -247,16 +282,16 @@ class PagedCache:
         if not self.prefix_caching:
             return
         bs = self.block_size
-        count, h = self._committed[slot]
+        chain = self._chain[slot]
+        h = chain[-1] if chain else 0
         full = len(tokens) // bs
-        for i in range(count, full):
+        for i in range(len(chain), full):
             h = _chain_hash(h, tuple(tokens[i * bs:(i + 1) * bs]))
             b = self._owned[slot][i]
             if h not in self._block_of and b not in self._hash_of:
                 self._block_of[h] = b
                 self._hash_of[b] = h
-        if full > count:
-            self._committed[slot] = (full, h)
+            chain.append(h)
 
     def prepare_write(self, slot: int, start: int, end: int
                       ) -> list[tuple[int, int]]:
@@ -264,18 +299,20 @@ class PagedCache:
         [start, end).  Any shared (ref>1) block in that range is replaced
         by a fresh block; returns (src, dst) pool copies for the engine to
         run on device.  May raise OutOfBlocks."""
-        copies: list[tuple[int, int]] = []
-        for bi in range(start // self.block_size,
-                        (end - 1) // self.block_size + 1):
-            if bi >= len(self._owned[slot]):
-                continue
+        shared = [bi for bi in range(start // self.block_size,
+                                     (end - 1) // self.block_size + 1)
+                  if bi < len(self._owned[slot])
+                  and self.allocator.ref(self._owned[slot][bi]) > 1]
+        if not shared:
+            return []
+        fresh = self.allocator.alloc(len(shared))  # all-or-nothing: a raise
+        copies: list[tuple[int, int]] = []         # here mutates no state
+        for bi, new in zip(shared, fresh):
             b = self._owned[slot][bi]
-            if self.allocator.ref(b) > 1:
-                [new] = self.allocator.alloc(1)
-                self.allocator.decref(b, retain=b in self._hash_of)
-                self._owned[slot][bi] = new
-                self.tables[slot, bi] = new
-                copies.append((b, new))
+            self.allocator.decref(b, retain=b in self._hash_of)
+            self._owned[slot][bi] = new
+            self.tables[slot, bi] = new
+            copies.append((b, new))
         return copies
 
     # ----- invariant oracle (property tests) -----
@@ -297,3 +334,11 @@ class PagedCache:
             assert b in self.allocator._ref or b in self.allocator._cached
         for b in self.allocator._cached:
             assert b in self._hash_of
+        # committed chains never outrun ownership, and a block this slot
+        # both owns and registered carries the chain's hash for its index
+        for slot, chain in enumerate(self._chain):
+            assert len(chain) <= len(self._owned[slot])
+            for i, h in enumerate(chain):
+                b = self._owned[slot][i]
+                if b in self._hash_of:
+                    assert self._hash_of[b] == h, (slot, i, b)

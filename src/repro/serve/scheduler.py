@@ -55,6 +55,10 @@ class RequestState:
     generated: list[int] = dataclasses.field(default_factory=list)
     preemptions: int = 0
     stopped: bool = False
+    # speculative decoding (engine spec mode; DESIGN.md §9)
+    draft_cached: int = 0             # tokens written to the *draft* pool
+    spec_proposed: int = 0            # draft tokens offered to verification
+    spec_accepted: int = 0            # draft tokens the target accepted
 
     @property
     def seq(self) -> tuple[int, ...]:
@@ -82,16 +86,21 @@ class RequestState:
     def reset_for_preemption(self) -> None:
         self.slot = -1
         self.num_cached = 0
+        self.draft_cached = 0
         self.preemptions += 1
 
 
 @dataclasses.dataclass
 class StepPlan:
     """One engine step's work: a batched decode set, per-slot prefill
-    chunks (state, n_tokens), and device pool copies (COW) to run first."""
+    chunks (state, n_tokens), device pool copies (COW) to run first, and
+    the decode subset taking a K-token speculative draft/verify cycle
+    this step (``spec`` is always a subset of ``decode``; pool room for
+    the K+1 speculative positions is pre-reserved)."""
     decode: list[RequestState]
     prefill: list[tuple[RequestState, int]]
     copies: list[tuple[int, int]]
+    spec: list[RequestState] = dataclasses.field(default_factory=list)
 
 
 class FCFSScheduler:
@@ -199,31 +208,65 @@ class FCFSScheduler:
             admitted.append(cand)
         return admitted
 
-    def plan_step(self, chunk_size: int = 0, prefill_budget: int = 0
-                  ) -> StepPlan:
+    def plan_step(self, chunk_size: int = 0, prefill_budget: int = 0,
+                  spec_k: int = 0) -> StepPlan:
         """One scheduling round.  Returns the step plan; ``chunk_size <= 1``
-        reproduces the legacy all-through-decode behavior exactly."""
+        reproduces the legacy all-through-decode behavior exactly.
+
+        ``spec_k > 0`` plans speculative draft/verify cycles: decode-phase
+        slots are offered a K-token draft if (a) the request still wants
+        more than one token, (b) the shared token budget — prefill chunks
+        are planned first, so prompt streaming keeps its TTFT priority —
+        has K tokens left, and (c) the pool can reserve the K+1
+        speculative positions (shared blocks in the write range are COWed
+        now).  A slot that fails any gate simply rides the step as a
+        plain one-token decode; speculation is an opportunistic upgrade,
+        never a correctness dependency."""
         self.retire_finished()
         self.grow_or_preempt()
         self.admit()
         copies, self._copies = self._copies, []
-        if chunk_size <= 1:
+        if chunk_size <= 1 and spec_k <= 0:
             return StepPlan(decode=list(self.running), prefill=[],
                             copies=copies)
-        decode = [s for s in self.running if s.phase == "decode"]
+        # with chunking off, prefill-phase slots still advance through the
+        # decode path token by token (the legacy contract)
+        decode = list(self.running) if chunk_size <= 1 else \
+            [s for s in self.running if s.phase == "decode"]
         prefill: list[tuple[RequestState, int]] = []
         budget = prefill_budget if prefill_budget > 0 else float("inf")
-        for s in sorted(self.running, key=lambda r: r.req.rid):
-            if s.phase != "prefill" or budget <= 0:
-                continue
-            n = int(min(chunk_size, s.seq_len - s.num_cached, budget))
-            # admission pre-reserved blocks through seq_len+1, so the
-            # chunk's write range is already backed; assert, don't alloc
-            assert self.cache.blocks_for(s.num_cached + n) <= \
-                len(self.cache.owned(s.slot))
-            prefill.append((s, n))
-            budget -= n
-        return StepPlan(decode=decode, prefill=prefill, copies=copies)
+        if chunk_size > 1:
+            for s in sorted(self.running, key=lambda r: r.req.rid):
+                if s.phase != "prefill" or budget <= 0:
+                    continue
+                n = int(min(chunk_size, s.seq_len - s.num_cached, budget))
+                # admission pre-reserved blocks through seq_len+1, so the
+                # chunk's write range is already backed; assert, don't alloc
+                assert self.cache.blocks_for(s.num_cached + n) <= \
+                    len(self.cache.owned(s.slot))
+                prefill.append((s, n))
+                budget -= n
+        spec: list[RequestState] = []
+        if spec_k > 0:
+            for s in sorted(decode, key=lambda r: r.req.rid):
+                want = s.req.max_new_tokens - len(s.generated)
+                if s.phase != "decode" or want <= 1 or budget < spec_k:
+                    continue
+                try:
+                    self.cache.ensure(s.slot, s.num_cached + 1 + spec_k)
+                    copies.extend(self.cache.prepare_write(
+                        s.slot, s.num_cached, s.num_cached + 1 + spec_k))
+                except OutOfBlocks:
+                    # plain decode; +1 is already backed.  If ensure
+                    # succeeded but the COW alloc failed, hand the
+                    # speculative surplus back rather than idling it
+                    # while grow_or_preempt evicts someone else
+                    self.cache.truncate(s.slot, s.num_cached + 1)
+                    continue
+                spec.append(s)
+                budget -= spec_k
+        return StepPlan(decode=decode, prefill=prefill, copies=copies,
+                        spec=spec)
 
     def commit_progress(self) -> None:
         """Register newly-filled full blocks in the prefix index (no-op

@@ -11,7 +11,10 @@ consistent under *any* interleaving.  Two drivers exercise them:
      refcount bookkeeping, double-free detection);
   2. a full ``FCFSScheduler`` + ``PagedCache`` run with a fake engine loop
      (random small-vocab prompts so prefix hits, COW and eviction all
-     fire; random chunk sizes/budgets; pools sized to force preemption).
+     fire; random chunk sizes/budgets; pools sized to force preemption;
+     random speculative lookaheads so the K+1 reservation, partial
+     acceptance and ``truncate`` rollback interleave with everything
+     else — including rollback into COW-shared prefix blocks).
 
 ``BlockAllocator.check()`` / ``PagedCache.check()`` run as the oracle
 after every operation.  The hypothesis variants explore the same drivers
@@ -110,6 +113,7 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
     sched = FCFSScheduler(cache)
     chunk = rng.choice([0, 1, 2, 3, 5])
     budget = rng.choice([0, 1, 4])
+    spec_k = rng.choice([0, 0, 2, 3])
     rid = 0
 
     for _ in range(rounds):
@@ -124,7 +128,7 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
                                   max_new_tokens=gen))
                 rid += 1
         try:
-            plan = sched.plan_step(chunk, budget)
+            plan = sched.plan_step(chunk, budget, spec_k)
         except OutOfBlocks:
             # a lone request legitimately outgrew an undersized pool
             cache.check()
@@ -136,8 +140,24 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
             s.num_cached += n
             if covered:
                 s.generated.append(rng.randint(0, 1))
+        spec_rids = {s.req.rid for s in plan.spec}
         for s in plan.decode:
             was_last = s.num_cached == s.seq_len - 1
+            if s.req.rid in spec_rids:
+                # speculative cycle: partial acceptance appends 1..K
+                # tokens, then rollback releases the rejected suffix —
+                # possibly rolling into a COW-shared or indexed block
+                assert was_last
+                a = rng.randint(0, spec_k)
+                emit = a + (1 if a < spec_k else 0)
+                for _ in range(emit):
+                    s.num_cached += 1
+                    s.generated.append(rng.randint(0, 1))
+                    if s.done:
+                        break
+                cache.truncate(s.slot, s.num_cached)
+                cache.check()
+                continue
             s.num_cached += 1
             if was_last:
                 s.generated.append(rng.randint(0, 1))
@@ -197,6 +217,56 @@ def test_cached_blocks_are_reclaimed_lru_first():
     assert order == got[:2]
     assert set(fresh) == set(got[:2])
     a.check()
+
+
+def test_truncate_rollback_into_cow_shared_block():
+    """Speculative rollback landing inside a block another slot still
+    references: the surplus blocks decref (not hard-free), the shared
+    boundary block keeps its prefix-index entry (donors hold the
+    content), and conservation holds throughout."""
+    c = PagedCache(max_seqs=2, num_blocks=8, block_size=2,
+                   max_blocks_per_seq=4, prefix_caching=True)
+    toks = (1, 2, 3, 4)
+    c.ensure(0, 4)
+    c.commit(0, toks)                  # slot 0 registers two full blocks
+    assert c.assign_prefix(1, toks) == 4          # slot 1 aliases both
+    shared = c.owned(1)
+    assert c.allocator.ref(shared[0]) == 2
+    c.ensure(1, 7)                     # speculative growth: +2 blocks
+    c.check()
+    # rollback to 3 tokens: cursor lands inside shared block 1
+    c.truncate(1, 3)
+    c.check()
+    assert c.owned(1) == shared[:2]    # surplus released, aliases kept
+    assert c.allocator.ref(shared[1]) == 2
+    # the entry survives: slot 0 still holds that content
+    assert shared[1] in c._hash_of
+    # and a third request can still prefix-match through it
+    c.release(1)
+    c.check()
+    assert c.assign_prefix(1, toks) == 4
+
+
+def test_truncate_unregisters_sole_owner_boundary_block():
+    """Rolling back into a registered block this slot alone owns drops
+    the index entry — the block's content is about to be rewritten, and
+    a stale entry would hand later requests wrong KV."""
+    c = PagedCache(max_seqs=1, num_blocks=6, block_size=2,
+                   max_blocks_per_seq=4, prefix_caching=True)
+    toks = (1, 2, 3, 4, 5, 6)
+    c.ensure(0, 6)
+    c.commit(0, toks)                  # three registered full blocks
+    b = c.owned(0)
+    c.truncate(0, 3)                   # cursor inside block 1 (ref == 1)
+    c.check()
+    assert c.owned(0) == b[:2]
+    assert b[0] in c._hash_of          # intact full block keeps its entry
+    assert b[1] not in c._hash_of      # boundary entry dropped
+    assert b[2] in c._hash_of          # released block cached via index
+    assert len(c._chain[0]) == 1
+    # a new request can only match the still-valid first block
+    c.release(0)
+    assert c.assign_prefix(0, toks) == 2
 
 
 def test_prefix_index_drops_entries_on_eviction():
