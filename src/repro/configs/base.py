@@ -197,6 +197,13 @@ SHAPES: dict[str, ShapeConfig] = {
     # in one multi-token pass against a 32k paged history (DESIGN.md §9)
     "spec_verify_8": ShapeConfig("spec_verify_8", 32_768, 128,
                                  "spec_verify"),
+    # mesh-aware serving step (DESIGN.md §10): same shape as
+    # paged_decode_32k but lowered under the *serve* rule set — slots
+    # data-parallel, pools tensor-parallel over kv_heads — with the mesh
+    # threaded through so the engine-identical sharded step is what the
+    # grid measures
+    "paged_decode_sharded": ShapeConfig("paged_decode_sharded", 32_768, 128,
+                                        "paged_decode_sharded"),
 }
 
 # verify chunk width of the spec_verify grid cell (the K of its name);
@@ -204,7 +211,8 @@ SHAPES: dict[str, ShapeConfig] = {
 # FLOPs model (benchmarks/roofline.py)
 SPEC_VERIFY_CHUNK = 8
 
-DECODE_KINDS = ("decode", "paged_decode", "paged_prefill", "spec_verify")
+DECODE_KINDS = ("decode", "paged_decode", "paged_prefill", "spec_verify",
+                "paged_decode_sharded")
 
 
 def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:

@@ -41,6 +41,11 @@ SINGLE_POD_RULES: dict[str, tuple[str, ...]] = {
     "layers": (),
     "capacity": ("data",),   # MoE dispatch-group axis (size-1 when grouped
                              # dispatch is off -> auto-replicated)
+    # serving engine (repro.serve): request slots are data-parallel, the
+    # paged block pools shard over kv_heads (tensor parallel) and the
+    # block-address axes stay replicated (DESIGN.md §10)
+    "serve_batch": ("data",),
+    "serve_blocks": (),
 }
 
 # Multi-pod (pod, data, model): batch/fsdp additionally span the pod axis.
@@ -122,29 +127,44 @@ class ShardingRules:
 # launcher / dry-run before tracing).  ``None`` means "no constraints":
 # smoke tests on one CPU device run entirely unconstrained.
 _ACTIVE: ShardingRules | None = None
+# Concrete mesh for code that needs more than logical->PartitionSpec
+# resolution: the paged-attention kernel wraps itself in shard_map when a
+# mesh is active (GSPMD cannot partition an opaque pallas_call, so without
+# the wrap a sharded serve step would all-gather the KV pools).
+_ACTIVE_MESH: Mesh | None = None
 
 
 class use_rules:
-    """Context manager installing sharding rules for model tracing."""
+    """Context manager installing sharding rules (and optionally the
+    concrete mesh) for model tracing."""
 
-    def __init__(self, rules: ShardingRules | None):
+    def __init__(self, rules: ShardingRules | None, mesh: Mesh | None = None):
         self.rules = rules
+        self.mesh = mesh
         self._prev: ShardingRules | None = None
+        self._prev_mesh: Mesh | None = None
 
     def __enter__(self):
-        global _ACTIVE
+        global _ACTIVE, _ACTIVE_MESH
         self._prev = _ACTIVE
+        self._prev_mesh = _ACTIVE_MESH
         _ACTIVE = self.rules
+        _ACTIVE_MESH = self.mesh
         return self.rules
 
     def __exit__(self, *exc):
-        global _ACTIVE
+        global _ACTIVE, _ACTIVE_MESH
         _ACTIVE = self._prev
+        _ACTIVE_MESH = self._prev_mesh
         return False
 
 
 def active_rules() -> ShardingRules | None:
     return _ACTIVE
+
+
+def active_mesh() -> Mesh | None:
+    return _ACTIVE_MESH
 
 
 def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
@@ -167,3 +187,22 @@ def param_spec(rules: ShardingRules | None, logical_axes: Sequence[str | None]) 
     if rules is None:
         return P()
     return rules.spec(logical_axes)
+
+
+def _tuple_leaf(t) -> bool:
+    return isinstance(t, tuple)
+
+
+def tree_shardings(mesh: Mesh, rules: ShardingRules, axes_tree,
+                   shaped_tree=None):
+    """Logical-axes pytree -> NamedShardings, divisibility-aware when a
+    matching pytree of shaped values (arrays or ShapeDtypeStructs) is
+    given.  Shared by the dry-run lowering and the serving engine's
+    sharded jit setup."""
+    if shaped_tree is None:
+        return jax.tree_util.tree_map(
+            lambda ax: NamedSharding(mesh, rules.spec(ax)), axes_tree,
+            is_leaf=_tuple_leaf)
+    return jax.tree_util.tree_map(
+        lambda ax, x: NamedSharding(mesh, rules.spec(ax, shape=x.shape)),
+        axes_tree, shaped_tree, is_leaf=_tuple_leaf)

@@ -36,25 +36,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs import (ASSIGNED_ARCHS, SHAPES, cell_supported, get_config)
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.distributed.collectives import collective_bytes
-from repro.distributed.sharding import ShardingRules, use_rules
-from repro.launch.mesh import arch_rules, make_production_mesh
+from repro.distributed.sharding import (ShardingRules, tree_shardings,
+                                        use_rules)
+from repro.launch.mesh import arch_rules, make_production_mesh, serve_rules
 from repro.models import build
 from repro.train.optim import OptConfig, init_opt_state, make_train_step
 
-
-def _tuple_leaf(t):
-    return isinstance(t, tuple)
-
-
-def shardings_for(mesh: Mesh, rules: ShardingRules, axes_tree, sds_tree=None):
-    """Logical axes -> NamedShardings, divisibility-aware when SDS given."""
-    if sds_tree is None:
-        return jtu.tree_map(
-            lambda ax: NamedSharding(mesh, rules.spec(ax)), axes_tree,
-            is_leaf=_tuple_leaf)
-    return jtu.tree_map(
-        lambda ax, sds: NamedSharding(mesh, rules.spec(ax, shape=sds.shape)),
-        axes_tree, sds_tree, is_leaf=_tuple_leaf)
+# Logical axes -> NamedShardings over a pytree (moved to
+# distributed.sharding so the serving engine shares it; old name kept for
+# callers of the dry-run module).
+shardings_for = tree_shardings
 
 
 def batch_axes(cfg: ArchConfig, with_targets: bool) -> dict:
@@ -96,7 +87,15 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     # would otherwise replay a previous cell's trace with different rules
     jax.clear_caches()
     mesh = make_production_mesh(multi_pod=multi_pod)
-    rules = arch_rules(cfg, mesh, shape, extra=rule_overrides)
+    # the sharded serving cell lowers under the engine's rule set (slots
+    # data-parallel, pools tensor-parallel; launch/mesh.serve_rules) with
+    # the concrete mesh threaded through — exactly what Engine(mesh=...)
+    # traces, so the grid measures the production serve step
+    serve_cell = shape.kind == "paged_decode_sharded"
+    if serve_cell:
+        rules = serve_rules(cfg, mesh, extra=rule_overrides)
+    else:
+        rules = arch_rules(cfg, mesh, shape, extra=rule_overrides)
     model = build(cfg)
     key = jax.random.PRNGKey(0)
 
@@ -104,7 +103,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     params_sh = shardings_for(mesh, rules, model.param_axes(), params_sds)
 
     t0 = time.time()
-    with use_rules(rules), mesh:
+    with use_rules(rules, mesh=mesh if serve_cell else None), mesh:
         if shape.kind == "train":
             opt_sds = jax.eval_shape(init_opt_state, params_sds)
             opt_sh = {"m": params_sh, "v": params_sh,
@@ -130,10 +129,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             lowered = jax.jit(
                 prefill_step, in_shardings=(params_sh, batch_sh),
             ).lower(params_sds, batch_sds)
-        elif shape.kind in ("paged_decode", "paged_prefill", "spec_verify"):
-            # serving-engine steps over the paged block pool (DESIGN.md §8/§9)
+        elif shape.kind in ("paged_decode", "paged_prefill", "spec_verify",
+                            "paged_decode_sharded"):
+            # serving-engine steps over the paged block pool
+            # (DESIGN.md §8/§9/§10)
             block_size = 64
-            if shape.kind == "paged_decode":
+            if shape.kind in ("paged_decode", "paged_decode_sharded"):
                 spec = model.paged_decode_input_spec(shape, block_size)
             elif shape.kind == "paged_prefill":
                 spec = model.paged_prefill_input_spec(shape, block_size)
@@ -141,12 +142,14 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                 spec = model.paged_verify_input_spec(shape, block_size)
             cache_sh = shardings_for(mesh, rules, model.paged_cache_axes(),
                                      spec["cache"])
+            slot_axis = "serve_batch" if serve_cell else "batch"
             batch_sh = {
                 k: NamedSharding(mesh, rules.spec(
-                    ("batch",) + (None,) * (len(v.shape) - 1), shape=v.shape))
+                    (slot_axis,) + (None,) * (len(v.shape) - 1),
+                    shape=v.shape))
                 for k, v in spec.items() if k != "cache"}
 
-            if shape.kind == "paged_decode":
+            if shape.kind in ("paged_decode", "paged_decode_sharded"):
                 def paged_step(params, cache, tokens, positions,
                                block_tables, active):
                     return model.paged_decode_step(

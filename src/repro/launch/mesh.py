@@ -34,6 +34,60 @@ def make_test_mesh(n_devices: int | None = None) -> Mesh:
     return _mk((n, 1), ("data", "model"))
 
 
+def make_serve_mesh(data: int = 0, model: int = 1) -> Mesh:
+    """(data, model) mesh for the serving engine.  ``data=0`` takes every
+    device not claimed by the model axis (the `--mesh` CLI default)."""
+    n = len(jax.devices())
+    if model < 1 or n % model:
+        raise ValueError(f"model axis {model} does not divide {n} devices")
+    if data == 0:
+        data = n // model
+    if data * model > n:
+        raise ValueError(f"mesh {data}x{model} needs {data * model} devices, "
+                         f"have {n}")
+    return _mk((data, model), ("data", "model"))
+
+
+def parse_mesh(spec: str) -> Mesh:
+    """'DxM' (e.g. '4x1', '2x2') -> serving mesh; 'auto' -> all devices
+    on the data axis."""
+    if spec == "auto":
+        return make_serve_mesh()
+    try:
+        data, model = (int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"--mesh wants 'DxM' or 'auto', got {spec!r}")
+    return make_serve_mesh(data, model)
+
+
+def serve_rules(cfg: ArchConfig, mesh: Mesh,
+                extra: dict | None = None) -> ShardingRules:
+    """Sharding rules for the serving engine on a (data, model) mesh.
+
+    Request slots (``serve_batch``) go data-parallel; the paged KV pools
+    and the head-sharded parameters go tensor-parallel over ``model`` via
+    ``kv_heads``/``heads``.  Head counts that don't divide the model axis
+    replicate (Megatron GQA convention) — the decode-time ``kv_seq``
+    fallback of ``arch_rules`` does not apply here because pool blocks,
+    not a contiguous sequence, are the paged cache's storage axis.
+    """
+    ov: dict[str, tuple[str, ...]] = {}
+    msize = mesh.shape["model"]
+    if cfg.n_kv_heads and cfg.n_kv_heads % msize != 0:
+        ov["kv_heads"] = ()
+    if cfg.n_heads and cfg.n_heads % msize != 0:
+        ov["heads"] = ()
+    # no FSDP at serve time: each data-parallel replica holds the full
+    # weights.  Sharding params over `data` (the training layout) would
+    # all-gather every matrix every decode step AND split the d_model
+    # contractions across data shards, whose reduction reorder breaks the
+    # byte-parity contract with the single-device engine.
+    ov["fsdp"] = ()
+    if extra:
+        ov.update(extra)
+    return ShardingRules.for_mesh(mesh, overrides=ov)
+
+
 def arch_rules(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig,
                extra: dict | None = None) -> ShardingRules:
     """Sharding rules specialized per (arch, mesh, shape).

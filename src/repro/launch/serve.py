@@ -8,7 +8,13 @@ unchanged, it just compiles to fewer FLOPs (see DESIGN.md §8).
       --reduced --requests 16 --prompt-len 32 --gen 32 \
       --max-seqs 8 --block-size 16 --chunk-size 32 --prefill-budget 64 \
       [--no-prefix-caching] [--prune-ratio 0.5] [--temperature 0.8] \
-      [--spec-k 4 --draft-ratio 0.5]
+      [--spec-k 4 --draft-ratio 0.5] [--mesh 4x1]
+
+``--mesh DxM`` (or ``auto``) serves over a (data, model) device mesh:
+request slots go data-parallel, the paged KV pools tensor-parallel over
+kv_heads, and the jitted steps run as one sharded SPMD program with the
+paged-attention kernel shard_mapped per device (DESIGN.md §10).  Multi-
+device CPU smoke: XLA_FLAGS=--xla_force_host_platform_device_count=4.
 
 Prefill is chunked through ``paged_prefill_step`` (``--chunk-size`` tokens
 per step per slot, ``--prefill-budget`` tokens per step across slots;
@@ -61,7 +67,9 @@ def generate(model, params, prompt: jax.Array, gen_len: int,
 
 def build_engine(cfg, model, params, args, draft_model=None,
                  draft_params=None):
+    from repro.launch.mesh import parse_mesh
     from repro.serve import Engine, ServeConfig
+    mesh = parse_mesh(args.mesh) if args.mesh else None
     # K tokens of headroom: speculative reservation (num_cached + K + 1)
     # must stay within per-seq capacity or tail cycles degrade to plain
     # decode (DESIGN.md §9)
@@ -71,8 +79,9 @@ def build_engine(cfg, model, params, args, draft_model=None,
         num_blocks=args.num_blocks, seed=args.seed,
         chunk_size=args.chunk_size, prefill_budget=args.prefill_budget,
         prefix_caching=not args.no_prefix_caching,
-        spec_k=args.spec_k),
-        draft_model=draft_model, draft_params=draft_params)
+        spec_k=args.spec_k, spec_ema=args.spec_ema,
+        draft_cache_dtype=args.draft_cache_dtype),
+        draft_model=draft_model, draft_params=draft_params, mesh=mesh)
 
 
 def main():
@@ -102,6 +111,15 @@ def main():
                     help="speculative draft tokens per cycle (0 = off)")
     ap.add_argument("--draft-ratio", type=float, default=0.5,
                     help="SPA prune ratio for the speculative draft")
+    ap.add_argument("--spec-ema", type=float, default=0.0,
+                    help="dynamic speculative K: EMA coefficient of the "
+                         "per-slot acceptance rate (0 = fixed K)")
+    ap.add_argument("--draft-cache-dtype", default="",
+                    help="draft KV pool dtype, e.g. bfloat16 "
+                         "(default: model dtype)")
+    ap.add_argument("--mesh", default="",
+                    help="serving mesh 'DxM' (data x model) or 'auto'; "
+                         "empty = single-device engine")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -141,6 +159,11 @@ def main():
 
     engine = build_engine(cfg, model, params, args, draft_model,
                           draft_params)
+    if engine.mesh is not None:
+        print(f"serving mesh: "
+              f"{dict(zip(engine.mesh.axis_names, engine.mesh.devices.shape))}"
+              f" | slots per data shard: "
+              f"{args.max_seqs // engine.scheduler.data_shards}")
     if args.spec_k > 0 and not engine.spec_active:
         print("speculative decoding gated off for this family "
               "(recurrent state cannot be rewound; DESIGN.md §9)")
@@ -159,6 +182,11 @@ def main():
           f"{stats['steps']:.0f} steps | "
           f"{stats['prefill_chunks']:.0f} prefill chunks | "
           f"mean ttft {stats['mean_ttft_s'] * 1e3:.1f}ms")
+    if engine.mesh is not None:
+        n_dev = int(engine.mesh.devices.size)
+        print(f"per-device decode "
+              f"{stats['decode_tok_per_s'] / n_dev:.1f} tok/s "
+              f"({n_dev} devices)")
     if engine.spec_active:
         print(f"speculative: {stats['spec_cycles']:.0f} cycles | "
               f"acceptance {stats['spec_acceptance']:.1%} "

@@ -65,8 +65,9 @@ class Model:
 
     # ----- paged serving (continuous batching; repro.serve) -----
     def init_paged_cache(self, num_blocks: int, block_size: int,
-                         max_seqs: int) -> dict:
-        return tf.init_paged_cache(self.cfg, num_blocks, block_size, max_seqs)
+                         max_seqs: int, dtype: str | None = None) -> dict:
+        return tf.init_paged_cache(self.cfg, num_blocks, block_size, max_seqs,
+                                   dtype=dtype)
 
     def paged_decode_step(self, params, cache, tokens, positions,
                           block_tables, active=None):

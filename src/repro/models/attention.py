@@ -167,7 +167,10 @@ def _scatter_kv(k_pool, v_pool, k_new, v_new, block_tables, positions,
     pointing past the table) are redirected to the reserved null block 0,
     where writes are harmless by construction.  Shared by the paged
     decode, chunked-prefill and speculative-verify paths, so the "where
-    does a token's KV land" rule exists exactly once."""
+    does a token's KV land" rule exists exactly once.  Writes cast to the
+    pool dtype: a draft pool may be allocated narrower than the compute
+    dtype (``ServeConfig.draft_cache_dtype`` — rejections cost speed,
+    never correctness)."""
     bs, NB = k_pool.shape[1], block_tables.shape[1]
     blk_idx = jnp.clip(positions // bs, 0, NB - 1)
     blk = jnp.take_along_axis(block_tables, blk_idx, axis=1)
@@ -175,7 +178,8 @@ def _scatter_kv(k_pool, v_pool, k_new, v_new, block_tables, positions,
     if inchunk is not None:
         blk = jnp.where(inchunk, blk, 0)
         off = jnp.where(inchunk, off, 0)
-    return k_pool.at[blk, off].set(k_new), v_pool.at[blk, off].set(v_new)
+    return (k_pool.at[blk, off].set(k_new.astype(k_pool.dtype)),
+            v_pool.at[blk, off].set(v_new.astype(v_pool.dtype)))
 
 
 def attention_paged_decode(params: dict, cfg, x: jax.Array,

@@ -94,7 +94,7 @@ def _combine_group(out_buf, slot, st, sw, keep, T: int):
     return y.at[st].add(picked.astype(jnp.float32) * sw[:, None])
 
 
-def moe_block(params: dict, cfg, x: jax.Array,
+def moe_block(params: dict, cfg, x: jax.Array, token_mask=None,
               ) -> tuple[jax.Array, jax.Array]:
     """x (B, S, d) -> (out (B, S, d), aux_loss scalar).
 
@@ -102,6 +102,15 @@ def moe_block(params: dict, cfg, x: jax.Array,
     groups (one per DP shard at launch): the scatter/gather becomes local
     per shard and the only cross-device traffic is the (E->model) expert
     all-to-all at the einsum boundary — collective-optimal (§Perf log).
+
+    ``token_mask`` (B, S) bool marks real tokens.  The serving engine's
+    fixed-shape batched steps carry padding rows (idle slots, chunk tail);
+    a padded token must not consume expert capacity — under load it would
+    displace a *real* token past the capacity cutoff and change its
+    output, breaking the engine's parity with the sequential oracle.
+    Masked tokens route to a virtual expert id E: the sort ranks them
+    last, ``bincount(length=E)`` never counts them, and the scatter drops
+    them.
     """
     B, S, d = x.shape
     T = B * S
@@ -115,6 +124,8 @@ def moe_block(params: dict, cfg, x: jax.Array,
     probs = jax.nn.softmax(logits, axis=-1)
     top_w, top_e = jax.lax.top_k(probs, k)                         # (T, k)
     top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    if token_mask is not None:
+        top_e = jnp.where(token_mask.reshape(T)[:, None], top_e, E)
 
     # load-balance aux loss (Switch-style)
     density = jnp.mean(jax.nn.one_hot(top_e[:, 0], E), axis=0)

@@ -310,29 +310,34 @@ def cache_axes(cfg: ArchConfig, long_context: bool = False) -> dict:
 
 
 def paged_cache_axes(cfg: ArchConfig) -> dict:
-    """Logical axes of the paged-pool cache pytree (dry-run sharding).
-    The block axis stays replicated — pool blocks are an addressing
-    structure, not a data-parallel one; KV shards over kv_heads and the
-    per-slot SSM state over the slot (batch) axis."""
+    """Logical axes of the paged-pool cache pytree (dry-run sharding and
+    the serving engine's sharded jit).  The block-address axes
+    (``serve_blocks``, block offset) stay replicated — any slot's blocks
+    must be readable from every data shard, and a block is a unit of
+    *addressing*, not of parallelism; KV shards over kv_heads (tensor
+    parallel) and the per-slot SSM state over the slot (``serve_batch``,
+    data parallel) axis.  See DESIGN.md §10."""
     axes: dict[str, Any] = {}
     if cfg.family != "ssm":
-        axes["k"] = ("layers", None, None, "kv_heads", None)
-        axes["v"] = ("layers", None, None, "kv_heads", None)
+        axes["k"] = ("layers", "serve_blocks", None, "kv_heads", None)
+        axes["v"] = ("layers", "serve_blocks", None, "kv_heads", None)
     if cfg.family == "ssm" or cfg.hybrid:
-        axes["conv"] = ("layers", "batch", None, None)
-        axes["state"] = ("layers", "batch", "ssm_heads", None, None)
+        axes["conv"] = ("layers", "serve_batch", None, None)
+        axes["state"] = ("layers", "serve_batch", "ssm_heads", None, None)
     return axes
 
 
 def _decode_layer(lp: dict, lc: dict, flag, h: jax.Array, cfg: ArchConfig,
-                  attn_fn, ssm_fn) -> tuple[jax.Array, dict]:
+                  attn_fn, ssm_fn, moe_mask=None) -> tuple[jax.Array, dict]:
     """One incremental layer, shared by the contiguous decode, paged decode
     and chunked paged-prefill paths.
 
     ``attn_fn(attn_params, hn, lc, flag) -> (a_out, kv_out_cache)`` and
     ``ssm_fn(ssm_params, hn, lc) -> (delta, SSMCache)`` encapsulate
     everything the cache layouts / step widths disagree on; the
-    residual/FFN scaffolding stays single-source.
+    residual/FFN scaffolding stays single-source.  ``moe_mask`` (B, S)
+    marks real tokens for expert dispatch — fixed-shape serving batches
+    carry padding that must not consume expert capacity (moe.moe_block).
     """
     out_cache: dict[str, Any] = {}
     hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
@@ -351,7 +356,8 @@ def _decode_layer(lp: dict, lc: dict, flag, h: jax.Array, cfg: ArchConfig,
     out_cache.update(kv_out)
     if cfg.n_experts:
         h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
-        m_out, _ = moe_mod.moe_block(lp["moe"], cfg, h2)
+        m_out, _ = moe_mod.moe_block(lp["moe"], cfg, h2,
+                                     token_mask=moe_mask)
         h = h + m_out
     elif cfg.d_ff:
         h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
@@ -360,7 +366,7 @@ def _decode_layer(lp: dict, lc: dict, flag, h: jax.Array, cfg: ArchConfig,
 
 
 def _run_decode_layers(params: dict, cfg: ArchConfig, cache: dict,
-                       x: jax.Array, attn_fn, ssm_fn
+                       x: jax.Array, attn_fn, ssm_fn, moe_mask=None
                        ) -> tuple[jax.Array, dict]:
     """Scan/unrolled layer loop + final norm shared by the incremental
     paths.  Returns (hidden (B, S, d), new cache); callers project the
@@ -369,7 +375,8 @@ def _run_decode_layers(params: dict, cfg: ArchConfig, cache: dict,
 
     def body(carry, xs):
         lp, lc, flag = xs
-        return _decode_layer(lp, lc, flag, carry, cfg, attn_fn, ssm_fn)
+        return _decode_layer(lp, lc, flag, carry, cfg, attn_fn, ssm_fn,
+                             moe_mask=moe_mask)
 
     if cfg.use_scan:
         h, new_cache = jax.lax.scan(body, x, (params["layers"], cache, flags))
@@ -418,15 +425,17 @@ def decode_step(params: dict, cfg: ArchConfig, cache: dict,
 # ---------------------------------------------------------------------------
 
 def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
-                     max_seqs: int) -> dict:
+                     max_seqs: int, dtype: str | None = None) -> dict:
     """Block-pool KV cache + per-slot SSM state.
 
     KV lives in a shared pool of ``num_blocks`` blocks of ``block_size``
     tokens (block 0 is the reserved null block that idle slots write into);
     SSM/conv state is O(1) per sequence, so it is a plain per-slot tensor —
-    paging it would buy nothing.
+    paging it would buy nothing.  ``dtype`` overrides the KV pool element
+    type (speculative draft pools tolerate lower precision: a draft
+    rejection costs speed, never correctness — DESIGN.md §9).
     """
-    dt = dtype_of(cfg.dtype)
+    dt = dtype_of(dtype or cfg.dtype)
     L = cfg.num_layers
     cache: dict[str, Any] = {}
     if cfg.family != "ssm":
@@ -434,7 +443,9 @@ def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
         cache["k"] = jnp.zeros((L, num_blocks, block_size, KH, hd), dt)
         cache["v"] = jnp.zeros((L, num_blocks, block_size, KH, vhd), dt)
     if cfg.family == "ssm" or cfg.hybrid:
-        sc = ssm_mod.init_ssm_cache(cfg, max_seqs, dt)
+        # recurrent state keeps the compute dtype: it is carried, not
+        # re-derived, so narrowing it would compound per step
+        sc = ssm_mod.init_ssm_cache(cfg, max_seqs, dtype_of(cfg.dtype))
         cache["conv"] = jnp.array(
             jnp.broadcast_to(sc.conv[None], (L,) + sc.conv.shape))
         cache["state"] = jnp.array(
@@ -483,7 +494,9 @@ def paged_decode_step(params: dict, cfg: ArchConfig, cache: dict,
             jnp.where(fresh[:, None, None, None], 0, lc["state"]))
         return ssm_mod.ssm_decode(sp, cfg, hn, sc)
 
-    h, new_cache = _run_decode_layers(params, cfg, cache, x, attn_fn, ssm_fn)
+    h, new_cache = _run_decode_layers(
+        params, cfg, cache, x, attn_fn, ssm_fn,
+        moe_mask=None if active is None else active[:, None])
     if active is not None:
         for name, nd in (("conv", 2), ("state", 3)):
             if name in new_cache:
@@ -502,8 +515,9 @@ def _paged_chunk_forward(params: dict, cfg: ArchConfig, cache: dict,
     in the null block) and advancing the recurrent SSM state through the
     valid prefix.  Returns (hidden (B, C, d), new cache)."""
     x = jnp.take(params["tok_embed"], tokens, axis=0)           # (B,C,d)
-    B = tokens.shape[0]
+    B, C = tokens.shape
     fresh = positions[:, 0] == 0      # first chunk: reset recurrent state
+    inchunk = jnp.arange(C)[None, :] < valid[:, None]           # real tokens
 
     def attn_fn(ap, hn, lc, flag):
         if cfg.hybrid:
@@ -522,10 +536,20 @@ def _paged_chunk_forward(params: dict, cfg: ArchConfig, cache: dict,
         state = jnp.where(fresh[:, None, None, None], 0, lc["state"][slots])
         delta, new_sc = ssm_mod.ssm_prefill(
             sp, cfg, hn, ssm_mod.SSMCache(conv, state), valid)
-        return delta, ssm_mod.SSMCache(lc["conv"].at[slots].set(new_sc.conv),
-                                       lc["state"].at[slots].set(new_sc.state))
+        # rows riding the fixed-shape chunk batch with no tokens this step
+        # (valid == 0: idle or decode-phase slots) must keep their
+        # recurrent state — their "fresh" zeroing above is trace-time
+        # scaffolding, not progress
+        act = valid > 0
+        new_conv = jnp.where(act[:, None, None], new_sc.conv,
+                             lc["conv"][slots])
+        new_state = jnp.where(act[:, None, None, None], new_sc.state,
+                              lc["state"][slots])
+        return delta, ssm_mod.SSMCache(lc["conv"].at[slots].set(new_conv),
+                                       lc["state"].at[slots].set(new_state))
 
-    return _run_decode_layers(params, cfg, cache, x, attn_fn, ssm_fn)
+    return _run_decode_layers(params, cfg, cache, x, attn_fn, ssm_fn,
+                              moe_mask=inchunk)
 
 
 def paged_prefill_step(params: dict, cfg: ArchConfig, cache: dict,

@@ -6,11 +6,13 @@ Jit-compiled device functions serve every in-flight request:
     feed their last sample; slots that are idle or mid-prefill ride along
     inactive (zeroed table row -> null-block writes; recurrent state
     gated by the ``active`` mask);
-  - a *prefill* step of fixed shape (1, chunk_size): one slot pushes a
-    chunk of known tokens through ``forward``-style attention, scattering
-    K/V straight into its pool blocks — O(P/chunk) engine steps per
-    P-token prompt instead of the O(P) token-by-token warmup, which is
-    what collapses time-to-first-token (benchmarks/serving.py);
+  - a *prefill* step of fixed shape (max_seqs, chunk_size): every slot
+    with a planned chunk pushes its known tokens through
+    ``forward``-style attention in ONE device call per step, scattering
+    K/V straight into its pool blocks (idle rows write the null block) —
+    O(P/chunk) engine steps per P-token prompt instead of the O(P)
+    token-by-token warmup, which is what collapses time-to-first-token
+    (benchmarks/serving.py);
   - with speculative decoding on (``spec_k > 0`` plus a draft model), a
     *draft* loop of K pruned-model decode steps fused into one call and a
     *verify* step of fixed shape (max_seqs, K+1) that scores every
@@ -43,10 +45,23 @@ Host<->device traffic is one batched transfer per step: every sampled
 token, acceptance count and prefill logit the host needs is fetched in a
 single ``jax.device_get`` (``stats["host_syncs"]``; asserted in
 tests/test_serve_spec.py).
+
+Sharded serving (``Engine(..., mesh=...)``; DESIGN.md §10): the same
+engine runs over a (data, model) device mesh — request slots
+data-parallel, paged pools tensor-parallel over kv_heads, all host
+bookkeeping (allocator, tables, prefix index, scheduler) still global
+and single-sourced.  Pure-DP attention meshes run every step under
+shard_map with per-device pool replicas (zero-collective steady
+decode); everything else goes through sharding-constrained jit with the
+paged-attention kernel shard_mapped per device.  Outputs are
+byte-identical to the single-device engine at temperature 0
+(tests/test_serve_sharded.py).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import math
 import time
 from typing import Any, Iterable
 
@@ -54,7 +69,10 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.distributed.sharding import tree_shardings, use_rules
 from repro.serve.kv_cache import PagedCache
 from repro.serve.scheduler import FCFSScheduler, Request, RequestState
 
@@ -70,6 +88,11 @@ class ServeConfig:
     prefill_budget: int = 0           # max prefill tokens/step (0 = no cap)
     prefix_caching: bool = True       # share full blocks across prefixes
     spec_k: int = 0                   # draft tokens per speculative cycle
+    spec_ema: float = 0.0             # >0: dynamic K, EMA coefficient of
+                                      # the per-slot acceptance rate
+    draft_cache_dtype: str = ""       # "" = draft pool in the model dtype;
+                                      # e.g. "bfloat16" narrows the draft
+                                      # KV pool (lossless under verify)
 
     @property
     def blocks_per_seq(self) -> int:
@@ -96,7 +119,7 @@ class FinishedRequest:
 
 class Engine:
     def __init__(self, model, params, cfg: ServeConfig | None = None,
-                 draft_model=None, draft_params=None):
+                 draft_model=None, draft_params=None, mesh=None):
         if not model.cfg.has_decode:
             raise ValueError(f"{model.cfg.name} has no decode path")
         if model.cfg.family == "vlm":
@@ -104,13 +127,59 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg or ServeConfig()
+        # --- mesh-aware serving (DESIGN.md §10) ---------------------------
+        # With a (data, model) mesh the engine becomes one sharded SPMD
+        # program: block pools + head-sharded params go tensor-parallel
+        # over `model` (kv_heads), request slots data-parallel over
+        # `data`; block tables and all host bookkeeping stay global.
+        # mesh=None is byte-for-byte the single-device engine.
+        #
+        # Two sharded modes:
+        #   "dp"    — pure data-parallel mesh (model axis 1), attention
+        #             family, slots divide the data axis: every step runs
+        #             under shard_map with a *device-local* pool replica
+        #             per data shard.  A shard's replica is authoritative
+        #             for its own slots' blocks only — decode AND prefill
+        #             both write shard-locally, so the prefix index is
+        #             home-shard gated (PagedCache.data_shards).  Zero
+        #             collectives in steady decode and prefill — devices
+        #             run fully concurrently.
+        #   "gspmd" — anything else (tensor parallelism, recurrent
+        #             families, non-dividing slot counts): sharding-
+        #             constrained jit; GSPMD keeps the pools globally
+        #             consistent with per-layer update collectives.
+        self.mesh = mesh
+        self.rules = None
+        self._data_shards = 1
+        self.shard_mode = "none"
+        if mesh is not None:
+            from repro.launch.mesh import serve_rules
+            self.rules = serve_rules(model.cfg, mesh)
+            bspec = self.rules.spec(("serve_batch",),
+                                    shape=(self.cfg.max_seqs,))[0]
+            names = () if bspec is None else (
+                (bspec,) if isinstance(bspec, str) else tuple(bspec))
+            self._data_shards = math.prod(mesh.shape[a] for a in names) \
+                if names else 1
+            self.shard_mode = "gspmd"
+            if (self._data_shards > 1 and mesh.shape.get("model", 1) == 1
+                    and model.cfg.family != "ssm" and not model.cfg.hybrid):
+                self.shard_mode = "dp"
         self.cache = model.init_paged_cache(
             num_blocks=self.cfg.pool_blocks(),
             block_size=self.cfg.block_size,
             max_seqs=self.cfg.max_seqs)
-        self._step_fn = jax.jit(self._step_impl, donate_argnums=(1,))
-        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=(1,))
-        self._cow_fn = jax.jit(self._cow_impl, donate_argnums=(0,))
+        if mesh is not None:
+            self._params_sh = tree_shardings(mesh, self.rules,
+                                             model.param_axes(), params)
+            self._cache_sh = tree_shardings(mesh, self.rules,
+                                            model.paged_cache_axes(),
+                                            self.cache)
+            self.params = jax.device_put(params, self._params_sh)
+            self.cache = jax.device_put(self.cache, self._cache_sh)
+        self._step_fn = self._make_fn(self._step_impl, "step", (1,))
+        self._prefill_fn = self._make_fn(self._prefill_impl, "prefill", (1,))
+        self._cow_fn = self._make_fn(self._cow_impl, "cow", (0,))
         # prefix caching needs the cached blocks to fully determine the
         # model state they stand for; recurrent SSM/conv state is per-slot
         # and not reconstructable from aliased KV blocks
@@ -131,23 +200,156 @@ class Engine:
             self.draft_cache = draft_model.init_paged_cache(
                 num_blocks=self.cfg.pool_blocks(),
                 block_size=self.cfg.block_size,
-                max_seqs=self.cfg.max_seqs)
-            self._draft_fn = jax.jit(self._draft_impl, donate_argnums=(1,))
-            self._verify_fn = jax.jit(self._verify_impl, donate_argnums=(1,))
-            self._draft_prefill_fn = jax.jit(self._draft_prefill_impl,
-                                             donate_argnums=(1,))
+                max_seqs=self.cfg.max_seqs,
+                dtype=self.cfg.draft_cache_dtype or None)
+            if mesh is not None:
+                self._draft_params_sh = tree_shardings(
+                    mesh, self.rules, draft_model.param_axes(), draft_params)
+                self._draft_cache_sh = tree_shardings(
+                    mesh, self.rules, draft_model.paged_cache_axes(),
+                    self.draft_cache)
+                self.draft_params = jax.device_put(draft_params,
+                                                   self._draft_params_sh)
+                self.draft_cache = jax.device_put(self.draft_cache,
+                                                  self._draft_cache_sh)
+            self._draft_fn = self._make_fn(self._draft_impl, "draft", (1,))
+            self._verify_fn = self._make_fn(self._verify_impl, "verify", (1,))
+            self._draft_prefill_fn = self._make_fn(
+                self._draft_prefill_impl, "draft_prefill", (1,))
         self.reset()
+
+    def _make_fn(self, impl, which: str, donate: tuple[int, ...]):
+        """Jit one device step.  "dp" mode wraps the impl in shard_map
+        first: per-device pool replicas (specs P() with check_rep=False —
+        replicas legitimately diverge on foreign slots' blocks) and every
+        slot-batched operand — decode rows AND prefill chunks — split
+        over `data`, so each shard computes and writes only its own
+        slots' blocks.  A block's KV therefore exists only on its home
+        shard, which is why the PagedCache prefix index is home-shard
+        gated in this mode.  The sampling key is folded with the shard
+        index so shards draw distinct noise at temperature > 0 (greedy
+        byte parity is key-independent)."""
+        if self.shard_mode == "dp":
+            if which in ("step", "prefill", "draft", "verify"):
+                inner = impl
+
+                def impl(*args, _inner=inner):
+                    *rest, key = args
+                    key = jax.random.fold_in(
+                        key, jax.lax.axis_index("data"))
+                    return _inner(*rest, key)
+            in_specs, out_specs = self._dp_specs(which)
+            impl = shard_map(impl, mesh=self.mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
+        return jax.jit(impl, donate_argnums=donate,
+                       **self._jit_shardings(which))
+
+    def _dp_specs(self, which: str):
+        d, r = P("data"), P()
+        dt = P("data", None)
+        dv = P("data", None, None)
+        if which == "step":
+            return (r, r, d, d, dt, d, d, r), (d, r)
+        if which == "prefill":
+            return (r, r, dt, dt, d, dt, d, d, r), (d, r)
+        if which == "cow":
+            return (r, r, r), r
+        if which == "draft":
+            return (r, r, dt, d, d, dt, d, d, r), (dt, dv, r)
+        if which == "verify":
+            return (r, r, d, dt, dv, d, d, dt, d, d, d, r), (dt, d, r)
+        if which == "draft_prefill":
+            return (r, r, dt, dt, d, dt, d), r
+        raise ValueError(which)
+
+    # ----- sharded-jit plumbing -----
+    def _sh(self, *axes: str | None, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.rules.spec(axes, shape=shape))
+
+    def _jit_shardings(self, which: str) -> dict:
+        """in/out_shardings for the jitted steps on the serving mesh.
+
+        Slot-batched operands split over the data axis; block tables are
+        sharded with their slots but replicated over model (every tensor
+        shard addresses the same pool blocks); PRNG keys and the B=1
+        prefill chunk replicate; params and pools keep their placement
+        (donated pools must round-trip with an identical sharding or XLA
+        cannot alias the buffers).  mesh=None -> plain jit.
+        """
+        if self.mesh is None:
+            return {}
+        B, NB = self.cfg.max_seqs, self.cfg.blocks_per_seq
+        K = max(self.cfg.spec_k, 1)
+        C = max(self.cfg.chunk_size, 1)
+        V = self.model.cfg.vocab_size
+        b1 = self._sh("serve_batch", shape=(B,))
+        bK = self._sh("serve_batch", None, shape=(B, K))
+        bC = self._sh("serve_batch", None, shape=(B, C))
+        bKV = self._sh("serve_batch", None, None, shape=(B, K, V))
+        bt = self._sh("serve_batch", None, shape=(B, NB))
+        r = self._sh()                      # replicated (keys, scalars)
+        if which == "step":
+            return dict(
+                in_shardings=(self._params_sh, self._cache_sh,
+                              b1, b1, bt, b1, b1, r),
+                out_shardings=(b1, self._cache_sh))
+        if which == "prefill":
+            return dict(
+                in_shardings=(self._params_sh, self._cache_sh,
+                              bC, bC, b1, bt, b1, b1, r),
+                out_shardings=(b1, self._cache_sh))
+        if which == "cow":
+            return dict(in_shardings=(self._cache_sh, r, r),
+                        out_shardings=self._cache_sh)
+        if which == "draft":
+            return dict(
+                in_shardings=(self._draft_params_sh, self._draft_cache_sh,
+                              bK, b1, b1, bt, b1, b1, r),
+                out_shardings=(bK, bKV, self._draft_cache_sh))
+        if which == "verify":
+            return dict(
+                in_shardings=(self._params_sh, self._cache_sh,
+                              b1, bK, bKV, b1, b1, bt, b1, b1, b1, r),
+                out_shardings=(bK, b1, self._cache_sh))
+        if which == "draft_prefill":
+            return dict(
+                in_shardings=(self._draft_params_sh, self._draft_cache_sh,
+                              bC, bC, b1, bt, b1),
+                out_shardings=self._draft_cache_sh)
+        raise ValueError(which)
+
+    def _trace_ctx(self):
+        """Sharding context for device calls in "gspmd" mode: installs the
+        serve rules + mesh (both the module-level context ``constrain``
+        and the kernel's shard_map wrap read, and jax's mesh context
+        manager that ``with_sharding_constraint`` needs) at trace time.
+
+        "dp" mode deliberately installs nothing: the step itself is the
+        shard_map — inside it every device runs plain single-device code
+        (constrain must no-op, and the kernel must not nest another
+        shard_map)."""
+        if self.mesh is None or self.shard_mode == "dp":
+            return contextlib.nullcontext()
+        stack = contextlib.ExitStack()
+        stack.enter_context(use_rules(self.rules, mesh=self.mesh))
+        stack.enter_context(self.mesh)
+        return stack
 
     def reset(self) -> None:
         """Clear all request/allocator state; keep params, pools, and the
         compiled step (stale pool contents are dead: reads are gated by
         per-slot positions and SSM state re-zeroes at position 0)."""
+        # per-device pool replicas ("dp") restrict prefix aliasing to a
+        # block's home shard and balance slot placement; "gspmd" pools
+        # are globally consistent, so they keep the global index and the
+        # legacy placement (data_shards=1)
         self.cache_host = PagedCache(
             max_seqs=self.cfg.max_seqs,
             num_blocks=self.cfg.pool_blocks(),
             block_size=self.cfg.block_size,
             max_blocks_per_seq=self.cfg.blocks_per_seq,
-            prefix_caching=self._prefix_ok)
+            prefix_caching=self._prefix_ok,
+            data_shards=self._data_shards if self.shard_mode == "dp" else 1)
         self.scheduler = FCFSScheduler(self.cache_host)
         self._key = jax.random.PRNGKey(self.cfg.seed)
         self._rid = 0
@@ -339,9 +541,14 @@ class Engine:
         """One engine step: schedule, run prefill chunks + the decode (or
         draft/verify) batch, fetch the results in one transfer, fold
         them back."""
+        with self._trace_ctx():
+            return self._step_host()
+
+    def _step_host(self) -> list[RequestState]:
         spec_k = self.cfg.spec_k if self.spec_active else 0
         plan = self.scheduler.plan_step(self.cfg.chunk_size,
-                                        self.cfg.prefill_budget, spec_k)
+                                        self.cfg.prefill_budget, spec_k,
+                                        self.cfg.spec_ema)
         running = plan.decode + [s for s, _ in plan.prefill]
         for s in running:
             self._admit_step.setdefault(s.req.rid, self._steps)
@@ -360,30 +567,47 @@ class Engine:
         sampled_prefills: list[RequestState] = []
 
         C = self.cfg.chunk_size
-        for s, n in plan.prefill:
-            seq = s.seq
-            toks = np.zeros((1, C), np.int32)
-            toks[0, :n] = seq[s.num_cached:s.num_cached + n]
-            pos = s.num_cached + np.arange(C, dtype=np.int32)[None]
+        if plan.prefill:
+            # every planned chunk rides ONE fixed-shape (max_seqs, C) call
+            # — one launch per step instead of a per-slot python loop, and
+            # under sharded-DP each data shard prefills its own slots
+            # concurrently.  Rows with valid == 0 are idle: K/V writes land
+            # in the null block, recurrent state is write-gated.
+            B = self.cfg.max_seqs
+            toks = np.zeros((B, C), np.int32)
+            pos = np.zeros((B, C), np.int32)
+            valid = np.zeros((B,), np.int32)
+            ptemps = np.zeros((B,), np.float32)
+            pref_active = np.zeros((B,), bool)
+            for s, n in plan.prefill:
+                seq = s.seq
+                toks[s.slot, :n] = seq[s.num_cached:s.num_cached + n]
+                pos[s.slot] = s.num_cached + np.arange(C, dtype=np.int32)
+                valid[s.slot] = n
+                ptemps[s.slot] = s.req.temperature
+                pref_active[s.slot] = True
+            ptables = np.where(pref_active[:, None],
+                               self.cache_host.tables, 0)
             args = (jnp.asarray(toks), jnp.asarray(pos),
-                    jnp.asarray([s.slot], np.int32),
-                    jnp.asarray(self.cache_host.tables[s.slot][None]),
-                    jnp.asarray([n], np.int32))
+                    jnp.asarray(np.arange(B, dtype=np.int32)),
+                    jnp.asarray(ptables), jnp.asarray(valid))
             self._key, sub = jax.random.split(self._key)
             nxt, self.cache = self._prefill_fn(
-                self.params, self.cache, *args,
-                jnp.asarray([s.req.temperature], np.float32), sub)
+                self.params, self.cache, *args, jnp.asarray(ptemps), sub)
             if spec_k:                        # keep the draft pool in step
                 self.draft_cache = self._draft_prefill_fn(
                     self.draft_params, self.draft_cache, *args)
-                s.draft_cached = s.num_cached + n
-            covered_last = s.num_cached + n == s.seq_len
-            s.num_cached += n
-            self._prefill_chunks += 1
-            self._prefill_tokens += n - (1 if covered_last else 0)
-            if covered_last:                  # chunk saw the last known token
-                fetch[f"p{len(sampled_prefills)}"] = nxt
-                sampled_prefills.append(s)
+            for s, n in plan.prefill:
+                if spec_k:
+                    s.draft_cached = s.num_cached + n
+                covered_last = s.num_cached + n == s.seq_len
+                s.num_cached += n
+                self._prefill_chunks += 1
+                self._prefill_tokens += n - (1 if covered_last else 0)
+                if covered_last:              # chunk saw the last known token
+                    sampled_prefills.append(s)
+            if sampled_prefills:
+                fetch["pre"] = nxt
 
         spec_meta: list[tuple[RequestState, int, int]] = []
         if plan.decode:
@@ -414,8 +638,8 @@ class Engine:
 
         vals = self._fetch(fetch) if fetch else {}
 
-        for i, s in enumerate(sampled_prefills):
-            self._append_sample(s, int(vals[f"p{i}"][0]))
+        for s in sampled_prefills:
+            self._append_sample(s, int(vals["pre"][s.slot]))
 
         if "dec" in vals:
             for s in plan.decode:
@@ -452,7 +676,12 @@ class Engine:
             known_len[s.slot] = kl
             start_pos[s.slot] = s.draft_cached
             draft_active[s.slot] = True
-            m = max(0, K - gap)               # candidates this cycle
+            # dynamic K (spec_ema > 0): the scheduler planned (and block-
+            # reserved) k_s <= K candidates for this slot; the device
+            # shapes stay (B, K) — surplus draft positions land in the
+            # null block and the verify mask discards them
+            k_s = s.spec_k_plan or K
+            m = max(0, k_s - gap)             # candidates this cycle
             ncand[s.slot] = m
             valid[s.slot] = max(1, m)         # verify rows consumed
             spec_meta.append((s, m, K))
@@ -502,6 +731,12 @@ class Engine:
                 s.spec_accepted += a
                 self._spec_proposed += n_cand
                 self._spec_accepted += a
+                if self.cfg.spec_ema > 0 and n_cand:
+                    # dynamic K: fold this cycle's acceptance rate into
+                    # the slot's EMA; the next plan_step clamps its K to
+                    # ceil(ema * spec_k) in [1, spec_k]
+                    al = self.cfg.spec_ema
+                    s.spec_ema = (1 - al) * s.spec_ema + al * (a / n_cand)
                 # rollback: rejected speculative positions release their
                 # surplus blocks; the commit cursor rewinds with them
                 self.cache_host.truncate(s.slot, s.num_cached)

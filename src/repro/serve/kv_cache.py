@@ -165,15 +165,28 @@ def _chain_hash(parent: int, tokens: tuple[int, ...]) -> int:
 
 @dataclasses.dataclass
 class PagedCache:
-    """Host-side paged-cache bookkeeping for ``max_seqs`` decode slots."""
+    """Host-side paged-cache bookkeeping for ``max_seqs`` decode slots.
+
+    ``data_shards > 1`` (sharded-DP serving, DESIGN.md §10): slots are
+    chunked over the mesh's data axis and each device holds its own pool
+    *replica*, authoritative only for blocks its slots wrote.  The prefix
+    index therefore records each registered block's home shard and only
+    hands a block to slots on that shard — an alias across shards would
+    read another replica's garbage.  ``data_shards == 1`` (single device,
+    or GSPMD-consistent pools) keeps the global index.
+    """
 
     max_seqs: int
     num_blocks: int
     block_size: int
     max_blocks_per_seq: int
     prefix_caching: bool = False
+    data_shards: int = 1
 
     def __post_init__(self):
+        # non-dividing shard counts fall back to the global (1-shard) view
+        if self.data_shards < 1 or self.max_seqs % self.data_shards:
+            self.data_shards = 1
         self.allocator = BlockAllocator(self.num_blocks,
                                         on_evict=self._forget_block)
         # null block 0 everywhere: idle slots harmlessly write into it
@@ -183,10 +196,14 @@ class PagedCache:
         # prefix index: chained content hash <-> pool block (full blocks only)
         self._block_of: dict[int, int] = {}          # hash  -> block
         self._hash_of: dict[int, int] = {}           # block -> hash
+        self._home_of: dict[int, int] = {}           # block -> home shard
         # per-slot committed chain: hash of each full block registered so
         # far (a list, not just the tip, so speculative rollback can rewind
         # the commit cursor block by block)
         self._chain: list[list[int]] = [[] for _ in range(self.max_seqs)]
+
+    def shard_of(self, slot: int) -> int:
+        return slot // (self.max_seqs // self.data_shards)
 
     @property
     def max_len(self) -> int:
@@ -246,6 +263,7 @@ class PagedCache:
     def _forget_block(self, block: int) -> None:
         h = self._hash_of.pop(block)
         del self._block_of[h]
+        self._home_of.pop(block, None)
 
     def assign_prefix(self, slot: int, tokens: tuple[int, ...]) -> int:
         """Alias the longest chain of cached full blocks matching ``tokens``
@@ -264,6 +282,12 @@ class PagedCache:
             h2 = _chain_hash(h, tuple(tokens[i * bs:(i + 1) * bs]))
             b = self._block_of.get(h2)
             if b is None:
+                break
+            if self.data_shards > 1 and \
+                    self._home_of.get(b) != self.shard_of(slot):
+                # per-replica pools: the block's KV only exists on its
+                # home shard — an alias from another shard would read
+                # that shard's (garbage) replica
                 break
             self.allocator.incref(b)
             matched.append(b)
@@ -291,6 +315,7 @@ class PagedCache:
             if h not in self._block_of and b not in self._hash_of:
                 self._block_of[h] = b
                 self._hash_of[b] = h
+                self._home_of[b] = self.shard_of(slot)
             chain.append(h)
 
     def prepare_write(self, slot: int, start: int, end: int
@@ -326,12 +351,14 @@ class PagedCache:
         for slot, lst in enumerate(self._owned):
             assert list(self.tables[slot, :len(lst)]) == lst
             assert not self.tables[slot, len(lst):].any()
-        # prefix index: bijective, and every entry points at a live or
-        # cached block; every cached block is in the index
+        # prefix index: bijective, every entry points at a live or cached
+        # block with a recorded home shard; every cached block is indexed
         assert len(self._block_of) == len(self._hash_of)
+        assert set(self._home_of) == set(self._hash_of)
         for h, b in self._block_of.items():
             assert self._hash_of[b] == h
             assert b in self.allocator._ref or b in self.allocator._cached
+            assert 0 <= self._home_of[b] < self.data_shards
         for b in self.allocator._cached:
             assert b in self._hash_of
         # committed chains never outrun ownership, and a block this slot

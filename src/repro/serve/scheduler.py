@@ -32,7 +32,8 @@ the copy-on-write case in kv_cache.py).
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import math
+from collections import Counter, deque
 from typing import Sequence
 
 from repro.serve.kv_cache import OutOfBlocks, PagedCache
@@ -59,6 +60,12 @@ class RequestState:
     draft_cached: int = 0             # tokens written to the *draft* pool
     spec_proposed: int = 0            # draft tokens offered to verification
     spec_accepted: int = 0            # draft tokens the target accepted
+    # dynamic K (ServeConfig.spec_ema > 0): EMA of the measured acceptance
+    # rate, folded by the engine after every verify; the scheduler plans
+    # ceil(ema * spec_k) candidates, clamped to [1, spec_k], so a slot
+    # whose draft keeps missing stops paying for rejected drafts
+    spec_ema: float = 1.0
+    spec_k_plan: int = 0              # candidates planned this cycle
 
     @property
     def seq(self) -> tuple[int, ...]:
@@ -111,6 +118,30 @@ class FCFSScheduler:
         self.finished: list[RequestState] = []
         self._free_slots = list(range(cache.max_seqs - 1, -1, -1))
         self._copies: list[tuple[int, int]] = []
+
+    # Sharded serving: slots are chunked over the mesh's data axis (slot
+    # s lives on shard s // (max_seqs / data_shards) — jax's row-chunked
+    # array layout).  The shard count lives on the PagedCache — one
+    # source of truth for both slot placement here and the home-shard
+    # prefix-alias guard there.  data_shards == 1 reproduces the legacy
+    # placement byte-for-byte.
+    @property
+    def data_shards(self) -> int:
+        return self.cache.data_shards
+
+    def shard_of(self, slot: int) -> int:
+        return self.cache.shard_of(slot)
+
+    def _pick_slot(self) -> int:
+        """Free slot to admit into: least-loaded data shard first (ties:
+        lowest shard, then lowest slot); single-shard keeps the legacy
+        LIFO free-list order byte-for-byte."""
+        if self.data_shards == 1:
+            return self._free_slots[-1]
+        load = Counter(self.shard_of(s.slot) for s in self.running)
+        return min(self._free_slots,
+                   key=lambda sl: (load[self.shard_of(sl)],
+                                   self.shard_of(sl), sl))
 
     # ----- queue -----
     def add(self, req: Request) -> RequestState:
@@ -186,7 +217,7 @@ class FCFSScheduler:
         admitted = []
         while self.waiting and self._free_slots:
             cand = self.waiting[0]
-            slot = self._free_slots[-1]
+            slot = self._pick_slot()
             seq = cand.seq
             copies: list[tuple[int, int]] = []
             try:
@@ -200,7 +231,7 @@ class FCFSScheduler:
                 self.cache.release(slot)      # roll back partial admission
                 break
             self.waiting.popleft()
-            self._free_slots.pop()
+            self._free_slots.remove(slot)
             cand.slot = slot
             cand.num_cached = nc
             self._copies.extend(copies)
@@ -209,7 +240,7 @@ class FCFSScheduler:
         return admitted
 
     def plan_step(self, chunk_size: int = 0, prefill_budget: int = 0,
-                  spec_k: int = 0) -> StepPlan:
+                  spec_k: int = 0, spec_ema: float = 0.0) -> StepPlan:
         """One scheduling round.  Returns the step plan; ``chunk_size <= 1``
         reproduces the legacy all-through-decode behavior exactly.
 
@@ -221,7 +252,14 @@ class FCFSScheduler:
         speculative positions (shared blocks in the write range are COWed
         now).  A slot that fails any gate simply rides the step as a
         plain one-token decode; speculation is an opportunistic upgrade,
-        never a correctness dependency."""
+        never a correctness dependency.
+
+        ``spec_ema > 0`` turns on dynamic K: each slot is planned
+        ``ceil(ema * spec_k)`` candidates (clamped to [1, spec_k]) from
+        its acceptance-rate EMA, so a consistently-rejected draft decays
+        to a single candidate while a well-matched one keeps the full K.
+        The device shapes stay (B, spec_k) — dynamic K narrows ``ncand``
+        and the pool reservation, never the compiled step."""
         self.retire_finished()
         self.grow_or_preempt()
         self.admit()
@@ -250,12 +288,14 @@ class FCFSScheduler:
         if spec_k > 0:
             for s in sorted(decode, key=lambda r: r.req.rid):
                 want = s.req.max_new_tokens - len(s.generated)
-                if s.phase != "decode" or want <= 1 or budget < spec_k:
+                k_s = spec_k if spec_ema <= 0 else \
+                    max(1, min(spec_k, math.ceil(s.spec_ema * spec_k)))
+                if s.phase != "decode" or want <= 1 or budget < k_s:
                     continue
                 try:
-                    self.cache.ensure(s.slot, s.num_cached + 1 + spec_k)
+                    self.cache.ensure(s.slot, s.num_cached + 1 + k_s)
                     copies.extend(self.cache.prepare_write(
-                        s.slot, s.num_cached, s.num_cached + 1 + spec_k))
+                        s.slot, s.num_cached, s.num_cached + 1 + k_s))
                 except OutOfBlocks:
                     # plain decode; +1 is already backed.  If ensure
                     # succeeded but the COW alloc failed, hand the
@@ -263,14 +303,17 @@ class FCFSScheduler:
                     # while grow_or_preempt evicts someone else
                     self.cache.truncate(s.slot, s.num_cached + 1)
                     continue
+                s.spec_k_plan = k_s
                 spec.append(s)
-                budget -= spec_k
+                budget -= k_s
         return StepPlan(decode=decode, prefill=prefill, copies=copies,
                         spec=spec)
 
     def commit_progress(self) -> None:
         """Register newly-filled full blocks in the prefix index (no-op
-        when prefix caching is off)."""
+        when prefix caching is off; under sharded-DP serving the cache
+        itself records each block's home shard and refuses cross-shard
+        aliases — see kv_cache.PagedCache)."""
         if not self.cache.prefix_caching:
             return
         for s in self.running:

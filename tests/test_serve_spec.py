@@ -315,3 +315,72 @@ def test_one_host_transfer_per_step(spec, key, monkeypatch):
     assert stats["host_syncs"] == calls["n"]
     assert calls["n"] <= stats["steps"]
     assert calls["n"] > 0
+
+
+# ---------------------------------------------------------------------------
+# 5. dynamic speculative K + draft-pool dtype narrowing
+# ---------------------------------------------------------------------------
+
+def test_dynamic_k_decays_under_bad_draft(key):
+    """spec_ema > 0: a draft that keeps missing must decay each slot's
+    planned K to the floor of 1 (the EMA of its ~0 acceptance rate),
+    while outputs stay byte-identical to the dense-only engine."""
+    m, params = _build("tinyllama-1.1b", key)
+    pr = prune_model(m, params, 0.5, criterion="l1")
+    bad_dp = build(pr.cfg).init(jax.random.PRNGKey(99))   # random draft
+    V = m.cfg.vocab_size
+    prompts = [[int(t) for t in jax.random.randint(
+        jax.random.PRNGKey(71 + b), (7,), 0, V)] for b in range(3)]
+    refs = [np.asarray(generate(m, params,
+                                jnp.asarray(p, jnp.int32)[None], 16))[0]
+            for p in prompts]
+    eng = Engine(m, params, ServeConfig(
+        max_seqs=3, block_size=4, max_len=40, chunk_size=4, spec_k=4,
+        spec_ema=0.5), draft_model=build(pr.cfg), draft_params=bad_dp)
+    res, stats = _serve(eng, prompts, 16)
+    for r, p, ref in zip(res, prompts, refs):
+        assert r.tokens == list(ref[len(p):])
+    assert stats["spec_acceptance"] < 0.3
+    finals = [s.spec_k_plan for s in eng.scheduler.finished]
+    assert all(k == 1 for k in finals), finals
+    assert all(s.spec_ema < 0.5 for s in eng.scheduler.finished)
+
+
+def test_dynamic_k_stays_high_for_good_draft(key):
+    """The target as its own draft (100% acceptance): the EMA stays at 1
+    and every cycle keeps the full K."""
+    m, params = _build("tinyllama-1.1b", key)
+    V = m.cfg.vocab_size
+    prompts = [[int(t) for t in jax.random.randint(
+        jax.random.PRNGKey(81 + b), (7,), 0, V)] for b in range(2)]
+    eng = Engine(m, params, ServeConfig(
+        max_seqs=2, block_size=4, max_len=40, chunk_size=4, spec_k=4,
+        spec_ema=0.5), draft_model=m, draft_params=params)
+    res, stats = _serve(eng, prompts, 16)
+    assert stats["spec_acceptance"] == 1.0
+    assert all(s.spec_k_plan == 4 for s in eng.scheduler.finished)
+    assert all(s.spec_ema == 1.0 for s in eng.scheduler.finished)
+
+
+def test_draft_cache_dtype_narrowing_is_lossless(key):
+    """A bfloat16 draft KV pool may change which drafts get proposed, but
+    greedy verify guarantees the emitted tokens are byte-identical to the
+    dense-only engine (rejections cost speed, never correctness)."""
+    m, params = _build("tinyllama-1.1b", key)
+    dm, dp = _build("tinyllama-1.1b", key, pruned_ratio=0.5)
+    V = m.cfg.vocab_size
+    B, P, GEN = 3, 11, 10
+    prompt = jax.random.randint(jax.random.PRNGKey(91), (B, P), 0, V)
+    prompts = [[int(t) for t in prompt[b]] for b in range(B)]
+    ref = np.asarray(generate(m, params, prompt, GEN))
+
+    eng = Engine(m, params, ServeConfig(
+        max_seqs=3, block_size=4, max_len=32, chunk_size=4, spec_k=3,
+        draft_cache_dtype="bfloat16"), draft_model=dm, draft_params=dp)
+    assert eng.draft_cache["k"].dtype == jnp.bfloat16
+    assert eng.draft_cache["v"].dtype == jnp.bfloat16
+    assert eng.cache["k"].dtype == jnp.float32    # target pool untouched
+    res, stats = _serve(eng, prompts, GEN)
+    assert stats["spec_cycles"] > 0
+    for b, r in enumerate(res):
+        assert r.tokens == list(ref[b, P:]), b

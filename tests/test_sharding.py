@@ -57,7 +57,7 @@ def test_cell_support_matrix():
     from repro.configs import cell_supported, ASSIGNED_ARCHS
     rows = {(a, s): cell_supported(get_config(a), SHAPES[s])[0]
             for a in ASSIGNED_ARCHS for s in SHAPES}
-    assert sum(rows.values()) == 56          # documented runnable cells
+    assert sum(rows.values()) == 65          # documented runnable cells
     assert not rows[("qwen3-1.7b", "long_500k")]
     assert rows[("mamba2-1.3b", "long_500k")]
     assert rows[("hymba-1.5b", "long_500k")]
@@ -73,6 +73,10 @@ def test_cell_support_matrix():
     assert not rows[("mamba2-1.3b", "spec_verify_8")]
     assert not rows[("hymba-1.5b", "spec_verify_8")]
     assert not rows[("hubert-xlarge", "spec_verify_8")]
+    # sharded serving step (DESIGN.md §10): every decode-capable arch
+    assert rows[("tinyllama-1.1b", "paged_decode_sharded")]
+    assert rows[("mamba2-1.3b", "paged_decode_sharded")]
+    assert not rows[("hubert-xlarge", "paged_decode_sharded")]
 
 
 def test_dryrun_paged_cells_lower(tmp_path, monkeypatch):
@@ -89,7 +93,8 @@ def test_dryrun_paged_cells_lower(tmp_path, monkeypatch):
                remat=False)
     out = tmp_path / "dryrun_paged.json"
     records = []
-    for shape in ("paged_decode_32k", "paged_prefill_512", "spec_verify_8"):
+    for shape in ("paged_decode_32k", "paged_prefill_512", "spec_verify_8",
+                  "paged_decode_sharded"):
         rec, _ = dryrun.lower_cell("tinyllama-1.1b", shape, False,
                                    opt_overrides=red)
         assert rec["status"] == "ok", rec
@@ -99,7 +104,8 @@ def test_dryrun_paged_cells_lower(tmp_path, monkeypatch):
     rows = json.loads(out.read_text())        # artifact round-trips
     assert {r["shape"] for r in rows} == {"paged_decode_32k",
                                           "paged_prefill_512",
-                                          "spec_verify_8"}
+                                          "spec_verify_8",
+                                          "paged_decode_sharded"}
 
 
 @pytest.mark.slow
@@ -120,23 +126,27 @@ def test_dryrun_subprocess_small():
 
 
 def test_dryrun_results_complete():
-    """The committed baseline sweep must cover all 140 cells with 0 errors
-    (10 archs x 7 shapes x 2 meshes; the paged serving cells joined with
+    """The committed baseline sweep must cover all 160 cells with 0 errors
+    (10 archs x 8 shapes x 2 meshes; the paged serving cells joined with
     the prefill-subsystem PR, spec_verify_8 with the speculative-decoding
-    PR).  Skips are exactly the structural ones: encoder-only archs have
-    no decode path, full-attention archs cannot serve 500k ctx, and
-    recurrent families cannot rewind speculative state."""
+    PR, paged_decode_sharded with the sharded-serving PR).  Skips are
+    exactly the structural ones: encoder-only archs have no decode path,
+    full-attention archs cannot serve 500k ctx, and recurrent families
+    cannot rewind speculative state."""
     path = os.path.join(os.path.dirname(__file__), "..", "results",
                         "dryrun_baseline.json")
     if not os.path.exists(path):
         pytest.skip("baseline sweep not generated yet")
     rows = json.load(open(path))
-    assert len(rows) == 140
+    assert len(rows) == 160
     by = {}
     for r in rows:
         by.setdefault(r["status"], []).append(r)
     assert "error" not in by, by.get("error")
-    assert len(by["ok"]) == 112 and len(by["skipped"]) == 28
+    assert len(by["ok"]) == 130 and len(by["skipped"]) == 30
     spec = [r for r in rows if r["shape"] == "spec_verify_8"]
     assert len(spec) == 20
     assert sum(r["status"] == "ok" for r in spec) == 14
+    shard = [r for r in rows if r["shape"] == "paged_decode_sharded"]
+    assert len(shard) == 20
+    assert sum(r["status"] == "ok" for r in shard) == 18
