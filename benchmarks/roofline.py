@@ -111,8 +111,16 @@ def min_memory_bytes(cfg: ArchConfig, shape: ShapeConfig,
     else:
         t = 2 * N / n_devices
         if cfg.n_heads:                  # KV cache read+write
+            # quantized pools (paged_decode_q8): 1 byte/element plus one
+            # f32 scale per (token, kv-head) per pool — ~4x fewer cache
+            # bytes/token than the f32 cell, ~2x vs bf16 (DESIGN.md §11)
+            from repro.kernels.paged_attention import is_quantized
+            elt = 1 if is_quantized(shape.cache_dtype) else 2
             kv = (cfg.num_layers * shape.global_batch * shape.seq_len
-                  * cfg.n_kv_heads * (cfg.head_dim_ + cfg.v_head_dim_) * 2)
+                  * cfg.n_kv_heads * (cfg.head_dim_ + cfg.v_head_dim_) * elt)
+            if is_quantized(shape.cache_dtype):
+                kv += (cfg.num_layers * shape.global_batch * shape.seq_len
+                       * cfg.n_kv_heads * 2 * 4)        # k+v scale pools
             t += 2 * kv / n_devices
         if cfg.ssm_state:
             st = (cfg.num_layers * shape.global_batch * cfg.ssm_n_heads

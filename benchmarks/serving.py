@@ -29,6 +29,14 @@ the dense-only engine by >= 1.3x decode tok/s with byte-identical greedy
 outputs.  Acceptance rate and per-variant tok/s are reported, and
 ``--out`` writes the rows + stats as JSON (uploaded as a CI artifact).
 
+With ``--cache-dtype [DTYPES]``, the quantized-KV-pool sweep runs
+(DESIGN.md §11): the briefly-trained bench model serves the same request
+set with fp32/bf16/int8 pools — greedy outputs and the per-step scheduler
+trace must be identical to fp32's, decode tok/s and pool bytes/block are
+reported, and at an equal pool-byte budget int8 must sustain >= 1.5x the
+concurrent slots fp32 can hold without preemption
+(``results/serving_quant.json`` CI artifact).
+
 With ``--sharded``, the mesh-aware serving section runs (DESIGN.md §10):
 for N in {1, 2, 4} a subprocess is forced to N host-platform devices
 (``XLA_FLAGS=--xla_force_host_platform_device_count=N``; the device count
@@ -46,6 +54,8 @@ artifact records the core count alongside the numbers).
   PYTHONPATH=src python -m benchmarks.serving --spec --out results/spec.json
   PYTHONPATH=src python -m benchmarks.serving --sharded \
       --out results/serving_sharded.json
+  PYTHONPATH=src python -m benchmarks.serving --cache-dtype \
+      --out results/serving_quant.json
   PYTHONPATH=src python -m benchmarks.run --only serving
 """
 from __future__ import annotations
@@ -383,6 +393,160 @@ def spec_rows(out_path: str | None = None) -> list[str]:
 
 
 # ---------------------------------------------------------------------------
+# Quantized KV pools (--cache-dtype): bandwidth/capacity vs accuracy
+# ---------------------------------------------------------------------------
+
+QUANT_PROMPT, QUANT_GEN, QUANT_NREQ = 32, 32, 8
+
+
+def _pool_block_bytes(cfg, block_size: int, dtype: str) -> int:
+    """Device bytes one KV block costs across all layers: elements plus,
+    for quantized dtypes, the per-(token, kv-head) f32 scale pools."""
+    esize = {"": 4, "float32": 4, "bfloat16": 2, "int8": 1, "fp8_e4m3": 1}
+    per = (cfg.num_layers * block_size * cfg.n_kv_heads
+           * (cfg.head_dim_ + cfg.v_head_dim_) * esize[dtype])
+    if dtype in ("int8", "fp8_e4m3"):
+        per += cfg.num_layers * block_size * cfg.n_kv_heads * 2 * 4
+    return per
+
+
+def _measured_pool_bytes(eng) -> int:
+    return sum(int(np.prod(eng.cache[n].shape)) * eng.cache[n].dtype.itemsize
+               for n in ("k", "v", "k_scale", "v_scale") if n in eng.cache)
+
+
+def _sched_trace(eng, prompts, gen):
+    """Serve step-by-step; returns (outputs, per-step running-rid trace,
+    decode tok/s)."""
+    eng.reset()
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=gen)
+    trace = []
+    t0 = time.time()
+    while eng.scheduler.has_work:
+        running = eng.step()
+        trace.append(tuple(sorted(s.req.rid for s in running)))
+    dt = time.time() - t0
+    out = {s.req.rid: list(s.generated) for s in eng.scheduler.finished}
+    dec = sum(len(t) for t in out.values())
+    return out, tuple(trace), dec / max(dt, 1e-9)
+
+
+def _sustained_slots(model, params, dtype: str, num_blocks: int,
+                     prompts) -> int:
+    """Largest number of concurrent full-length requests the pool serves
+    with ZERO preemptions — the capacity the quantized pool buys at a
+    fixed byte budget.  One engine, compiled once, reset per trial."""
+    eng = Engine(model, params, ServeConfig(
+        max_seqs=QUANT_NREQ, block_size=16,
+        max_len=QUANT_PROMPT + QUANT_GEN, chunk_size=16,
+        num_blocks=num_blocks, cache_dtype=dtype))
+    best = 0
+    for conc in range(1, QUANT_NREQ + 1):
+        eng.reset()
+        for p in prompts[:conc]:
+            eng.add_request(p, max_new_tokens=QUANT_GEN)
+        eng.run()
+        if sum(s.preemptions for s in eng.scheduler.finished):
+            break
+        best = conc
+    return best
+
+
+def quant_rows(dtypes_arg: str, out_path: str | None = None) -> list[str]:
+    """KV-pool dtype sweep on the briefly-trained bench model (random-init
+    argmax is noise; quantization cannot preserve a decision the model
+    makes at chance).  For each dtype vs the fp32 baseline:
+
+      - greedy outputs must match fp32's top-1 tokens exactly, with a
+        byte-identical scheduler trace (same steps, same running sets —
+        quantization must be invisible to the host);
+      - decode tok/s and pool bytes/block are reported;
+      - at an EQUAL pool-byte budget (sized so fp32 sustains ~3 slots),
+        the sustained concurrent slots before any preemption are measured
+        — int8 must reach >= 1.5x fp32's (DESIGN.md §11).
+    """
+    dtypes = [d for d in dtypes_arg.split(",") if d]
+    cfg = _spec_cfg()
+    model = build(cfg)
+    t0 = time.time()
+    params, loss = _spec_train(model, params=model.init(
+        jax.random.PRNGKey(0)), steps=110, lr=3e-3, seed=1)
+    t_setup = time.time() - t0
+
+    rng = np.random.default_rng(4)
+    chain = _spec_chain(2 * SPEC_VOCAB)
+    prompts = [[int(t) for t in
+                chain[int(rng.integers(0, SPEC_VOCAB)):][:QUANT_PROMPT]]
+               for _ in range(QUANT_NREQ)]
+
+    # equal-byte budget: an fp32 pool of 13 blocks (12 usable -> 3
+    # full-length slots of 4 blocks each)
+    budget = 13 * _pool_block_bytes(cfg, 16, "float32")
+
+    res: dict[str, dict] = {}
+    ref_out = ref_trace = None
+    for dtype in ["float32"] + [d for d in dtypes if d != "float32"]:
+        eng = Engine(model, params, ServeConfig(
+            max_seqs=QUANT_NREQ, block_size=16,
+            max_len=QUANT_PROMPT + QUANT_GEN, chunk_size=16,
+            cache_dtype=dtype))
+        blk_bytes = _measured_pool_bytes(eng) // eng.cfg.pool_blocks()
+        assert blk_bytes == _pool_block_bytes(cfg, 16, dtype)
+        _sched_trace(eng, prompts, QUANT_GEN)       # compile
+        best_tps, out, trace = 0.0, None, None
+        for _ in range(3):
+            out, trace, tps = _sched_trace(eng, prompts, QUANT_GEN)
+            best_tps = max(best_tps, tps)
+        if dtype == "float32":
+            ref_out, ref_trace = out, trace
+        else:
+            assert out == ref_out, \
+                f"{dtype} greedy outputs diverged from fp32 top-1"
+            assert trace == ref_trace, \
+                f"{dtype} changed scheduler behavior"
+        nb = max(2, budget // blk_bytes)
+        res[dtype] = {
+            "tok_per_s": best_tps,
+            "block_bytes": blk_bytes,
+            "blocks_at_budget": int(nb),
+            "sustained_slots": _sustained_slots(model, params, dtype,
+                                                int(nb), prompts),
+        }
+
+    base = res["float32"]
+    rows = [
+        f"serving_quant_float32,{1e6 / max(base['tok_per_s'], 1e-9):.1f},"
+        f"{base['tok_per_s']:.1f} tok/s {base['block_bytes']}B/block "
+        f"{base['sustained_slots']} slots at budget "
+        f"(trained loss {loss:.3f}, setup {t_setup:.0f}s)"]
+    for dtype in dtypes:
+        if dtype == "float32":
+            continue
+        r = res[dtype]
+        rows.append(
+            f"serving_quant_{dtype},{1e6 / max(r['tok_per_s'], 1e-9):.1f},"
+            f"{r['tok_per_s']:.1f} tok/s {r['block_bytes']}B/block "
+            f"({base['block_bytes'] / r['block_bytes']:.2f}x denser) "
+            f"{r['sustained_slots']} slots at equal pool bytes "
+            f"({r['sustained_slots'] / max(base['sustained_slots'], 1):.2f}x)"
+            f" top-1-identical")
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump({"rows": rows, "budget_bytes": budget,
+                       "results": res}, f, indent=1)
+    if "int8" in res:
+        ratio = res["int8"]["sustained_slots"] / \
+            max(base["sustained_slots"], 1)
+        assert ratio >= 1.5 or (
+            res["int8"]["block_bytes"] <= 0.6 * base["block_bytes"]
+            and res["int8"]["sustained_slots"] >= base["sustained_slots"]), \
+            f"int8 capacity win {ratio:.2f}x < 1.5x at equal pool bytes"
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Sharded serving (--sharded): data-parallel slots, byte-identical outputs
 # ---------------------------------------------------------------------------
 
@@ -541,6 +705,11 @@ if __name__ == "__main__":
                     help="run the speculative-decoding section")
     ap.add_argument("--sharded", action="store_true",
                     help="run the sharded-serving scaling section")
+    ap.add_argument("--cache-dtype", default=None, nargs="?",
+                    const="bfloat16,int8",
+                    help="run the quantized-KV-pool sweep; optional "
+                         "comma-separated dtypes (default bfloat16,int8; "
+                         "fp32 baseline always included)")
     ap.add_argument("--sharded-worker", default=None, metavar="DxM",
                     help=argparse.SUPPRESS)   # internal subprocess mode
     ap.add_argument("--out", default=None,
@@ -551,6 +720,8 @@ if __name__ == "__main__":
         sharded_worker(d, m)
     else:
         rows = (spec_rows(args.out) if args.spec
-                else sharded_rows(args.out) if args.sharded else run())
+                else sharded_rows(args.out) if args.sharded
+                else quant_rows(args.cache_dtype, args.out)
+                if args.cache_dtype else run())
         for r in rows:
             print(r)

@@ -180,6 +180,9 @@ class ShapeConfig:
     seq_len: int
     global_batch: int
     kind: str                      # "train" | "prefill" | "decode"
+    cache_dtype: str = ""          # paged-cell KV pool dtype override:
+                                   # "int8"/"fp8_e4m3" quantize the pool
+                                   # (+ f32 scale pools, DESIGN.md §11)
 
 
 SHAPES: dict[str, ShapeConfig] = {
@@ -204,6 +207,12 @@ SHAPES: dict[str, ShapeConfig] = {
     # grid measures
     "paged_decode_sharded": ShapeConfig("paged_decode_sharded", 32_768, 128,
                                         "paged_decode_sharded"),
+    # quantized-cache serving step (DESIGN.md §11): paged_decode_32k with
+    # an int8 KV pool + per-(block, token, kv-head) f32 scale pools and
+    # the dequant fused into the paged-attention kernel — the roofline
+    # must show the ~4x lower cache bytes/token vs the f32 cell
+    "paged_decode_q8": ShapeConfig("paged_decode_q8", 32_768, 128,
+                                   "paged_decode", cache_dtype="int8"),
 }
 
 # verify chunk width of the spec_verify grid cell (the K of its name);
@@ -225,6 +234,10 @@ def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
         return False, ("speculative rollback drops KV cursor positions; "
                        "recurrent SSM/conv state cannot be rewound "
                        "(DESIGN.md §9 capability matrix)")
+    if shape.cache_dtype and cfg.family == "ssm":
+        return False, ("no KV pool to quantize: the recurrent state is "
+                       "carried, not re-derived, so it stays full "
+                       "precision (DESIGN.md §11)")
     return True, ""
 
 

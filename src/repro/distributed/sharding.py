@@ -43,7 +43,11 @@ SINGLE_POD_RULES: dict[str, tuple[str, ...]] = {
                              # dispatch is off -> auto-replicated)
     # serving engine (repro.serve): request slots are data-parallel, the
     # paged block pools shard over kv_heads (tensor parallel) and the
-    # block-address axes stay replicated (DESIGN.md §10)
+    # block-address axes stay replicated (DESIGN.md §10).  Quantized
+    # caches add scale pools that reuse these same rules — their
+    # (layers, serve_blocks, offset, kv_heads) axes are the KV pools'
+    # minus head_dim, so a tensor shard holding a kv-head's bytes holds
+    # its scales with no extra rule (DESIGN.md §11)
     "serve_batch": ("data",),
     "serve_blocks": (),
 }

@@ -43,6 +43,15 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _positional_scales(fn):
+    """shard_map passes operands positionally; the kernel entry points
+    take the quantization scales keyword-only — adapt."""
+    def wrapped(*args):
+        *rest, ks, vs = args
+        return fn(*rest, k_scale=ks, v_scale=vs)
+    return wrapped
+
+
 def _serve_partition(B: int, H: int, KH: int):
     """(mesh, batch_axes, head_axes) when a serving mesh is active and at
     least one axis can actually split the work; None otherwise.
@@ -77,8 +86,15 @@ def _serve_partition(B: int, H: int, KH: int):
 def paged_attention(q, k_pool, v_pool, block_tables, kv_lens, *,
                     window=0, scale: float | None = None,
                     use_kernel: bool = True, interpret: bool | None = None,
-                    return_visits: bool = False):
-    """Decode: q (B, H, D); pools (P, bs, KH, D/DV) -> (B, H, DV)."""
+                    return_visits: bool = False,
+                    k_scale=None, v_scale=None):
+    """Decode: q (B, H, D); pools (P, bs, KH, D/DV) -> (B, H, DV).
+
+    ``k_scale``/``v_scale`` (P, bs, KH) mark the pools as quantized: the
+    kernel fuses dequantization into its load epilogue; the reference
+    dequantizes the gathered history.  Scale pools shard exactly like
+    their KV pools (kv_heads over the model axis) — same placement, same
+    shard_map specs minus the head_dim axis."""
     if use_kernel and isinstance(window, int):
         if interpret is None:
             interpret = not _on_tpu()
@@ -89,19 +105,27 @@ def paged_attention(q, k_pool, v_pool, block_tables, kv_lens, *,
         if part is not None:
             mesh, bd, hd = part
             bd, hd = (bd or None), (hd or None)
+            in_specs = (P(bd, hd, None), P(None, None, hd, None),
+                        P(None, None, hd, None), P(bd, None), P(bd))
+            if k_scale is not None:
+                in_specs += (P(None, None, hd), P(None, None, hd))
+                fn = _positional_scales(fn)
             fn = shard_map(
-                fn, mesh=mesh,
-                in_specs=(P(bd, hd, None), P(None, None, hd, None),
-                          P(None, None, hd, None), P(bd, None), P(bd)),
+                fn, mesh=mesh, in_specs=in_specs,
                 out_specs=(P(bd, hd, None), P(bd, hd)) if return_visits
                 else P(bd, hd, None),
                 check_rep=False)
-        return fn(q, k_pool, v_pool, block_tables, kv_lens)
+            if k_scale is not None:
+                return fn(q, k_pool, v_pool, block_tables, kv_lens,
+                          k_scale, v_scale)
+            return fn(q, k_pool, v_pool, block_tables, kv_lens)
+        return fn(q, k_pool, v_pool, block_tables, kv_lens,
+                  k_scale=k_scale, v_scale=v_scale)
     if return_visits:
         raise ValueError("visit counts are a kernel-path observable")
     return paged_attention_reference(
         q, k_pool, v_pool, block_tables, kv_lens,
-        window=window, scale=scale)
+        window=window, scale=scale, k_scale=k_scale, v_scale=v_scale)
 
 
 def paged_prefill_attention(q, k_pool, v_pool, block_tables, q_starts,
@@ -109,7 +133,8 @@ def paged_prefill_attention(q, k_pool, v_pool, block_tables, q_starts,
                             scale: float | None = None,
                             use_kernel: bool = True,
                             interpret: bool | None = None,
-                            return_visits: bool = False):
+                            return_visits: bool = False,
+                            k_scale=None, v_scale=None):
     """Chunked prefill: q (B, C, H, D) -> (B, C, H, DV)."""
     if use_kernel and isinstance(window, int):
         if interpret is None:
@@ -121,17 +146,25 @@ def paged_prefill_attention(q, k_pool, v_pool, block_tables, q_starts,
         if part is not None:
             mesh, bd, hd = part
             bd, hd = (bd or None), (hd or None)
+            in_specs = (P(bd, None, hd, None), P(None, None, hd, None),
+                        P(None, None, hd, None), P(bd, None), P(bd),
+                        P(bd))
+            if k_scale is not None:
+                in_specs += (P(None, None, hd), P(None, None, hd))
+                fn = _positional_scales(fn)
             fn = shard_map(
-                fn, mesh=mesh,
-                in_specs=(P(bd, None, hd, None), P(None, None, hd, None),
-                          P(None, None, hd, None), P(bd, None), P(bd),
-                          P(bd)),
+                fn, mesh=mesh, in_specs=in_specs,
                 out_specs=(P(bd, None, hd, None), P(bd, hd))
                 if return_visits else P(bd, None, hd, None),
                 check_rep=False)
-        return fn(q, k_pool, v_pool, block_tables, q_starts, kv_lens)
+            if k_scale is not None:
+                return fn(q, k_pool, v_pool, block_tables, q_starts,
+                          kv_lens, k_scale, v_scale)
+            return fn(q, k_pool, v_pool, block_tables, q_starts, kv_lens)
+        return fn(q, k_pool, v_pool, block_tables, q_starts, kv_lens,
+                  k_scale=k_scale, v_scale=v_scale)
     if return_visits:
         raise ValueError("visit counts are a kernel-path observable")
     return paged_prefill_attention_reference(
         q, k_pool, v_pool, block_tables, q_starts, kv_lens,
-        window=window, scale=scale)
+        window=window, scale=scale, k_scale=k_scale, v_scale=v_scale)

@@ -17,10 +17,21 @@ is never materialized, which is the whole point of paging.
 
 Fully-masked blocks are skipped: table entries past a sequence's length
 (``j * block_size >= kv_len``) and, under a sliding window, blocks wholly
-left of every query's window are neither computed nor (for the length
-case) DMA'd — their BlockSpec index degrades to the null block 0.  A
-per-(seq, kv-head) visit counter is emitted alongside the output so tests
-can assert the skip actually fires (tests/test_serve.py).
+left of every query's window are neither computed nor DMA'd — their
+BlockSpec index degrades to the null block 0 in both cases, so a
+window-dead block costs neither FLOPs nor HBM bandwidth.  A per-(seq,
+kv-head) visit counter is emitted alongside the output so tests can
+assert the skip actually fires (tests/test_serve.py): the counter and
+the index map share one liveness predicate (``_block_live``), so "was
+computed" and "was DMA'd" cannot drift apart.
+
+Quantized pools (DESIGN.md §11): when the pool stores int8/fp8-e4m3,
+per-(block, token, kv-head) f32 scale pools ride in as two extra
+operands addressed by the *same* index map as K/V, and the kernel fuses
+dequantization into the load epilogue — the K/V tile is upcast to f32
+and multiplied by its scales in VMEM right after the DMA, so the narrow
+bytes are all that crosses HBM and the online softmax stays f32
+end-to-end.
 
 GQA is handled as in ``flash_attention``: one grid step processes the G
 query heads of a KV head as part of the (C*G, D) tile, so K/V blocks are
@@ -38,9 +49,27 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(lens_ref, starts_ref, tables_ref, q_ref, k_ref, v_ref,
-            o_ref, visits_ref, acc_ref, m_ref, l_ref, cnt_ref, *,
-            scale: float, window: int, block_size: int, group: int):
+def _block_live(j, kv_len, q_start, *, window: int, block_size: int):
+    """One liveness predicate for compute AND DMA: a block is dead when
+    every one of its positions is masked for every query row — past the
+    sequence's length, or (sliding window) wholly left of even the
+    oldest query's window."""
+    first = j * block_size
+    live = first < kv_len
+    if window:
+        live &= first + block_size - 1 > q_start - window
+    return live
+
+
+def _kernel(lens_ref, starts_ref, tables_ref, q_ref, k_ref, v_ref, *refs,
+            scale: float, window: int, block_size: int, group: int,
+            quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, visits_ref, acc_ref, m_ref, l_ref, \
+            cnt_ref = refs
+    else:
+        ks_ref = vs_ref = None
+        o_ref, visits_ref, acc_ref, m_ref, l_ref, cnt_ref = refs
     b = pl.program_id(0)
     j = pl.program_id(2)
     nb = pl.num_programs(2)
@@ -55,15 +84,15 @@ def _kernel(lens_ref, starts_ref, tables_ref, q_ref, k_ref, v_ref,
     kv_len = lens_ref[b]
     q_start = starts_ref[b]
     first = j * block_size
-    visited = first < kv_len
-    if window:
-        # wholly left of even the oldest query's window -> fully masked
-        visited &= first + block_size - 1 > q_start - window
+    visited = _block_live(j, kv_len, q_start, window=window,
+                          block_size=block_size)
 
     @pl.when(visited)
     def _update():
         q = q_ref[0, 0].astype(jnp.float32)               # (CG, D)
         k = k_ref[0, :, 0].astype(jnp.float32)            # (bs, D)
+        if quantized:                  # fused dequant: f32 once, in VMEM
+            k = k * ks_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
 
@@ -84,6 +113,8 @@ def _kernel(lens_ref, starts_ref, tables_ref, q_ref, k_ref, v_ref,
         m_ref[...] = m_new
 
         v = v_ref[0, :, 0].astype(jnp.float32)            # (bs, DV)
+        if quantized:
+            v = v * vs_ref[0, :, 0][:, None]
         pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         acc_ref[...] = acc_ref[...] * alpha + pv
@@ -97,35 +128,56 @@ def _kernel(lens_ref, starts_ref, tables_ref, q_ref, k_ref, v_ref,
 
 
 def _paged_attention(q, k_pool, v_pool, block_tables, q_starts, kv_lens, *,
-                     window: int, scale: float | None, interpret: bool):
+                     window: int, scale: float | None, interpret: bool,
+                     k_scale=None, v_scale=None):
     """q (B, C, H, D); pools (P, bs, KH, D/DV); tables (B, NB);
-    q_starts/kv_lens (B,).  Returns (out (B, C, H, DV), visits (B, KH))."""
+    q_starts/kv_lens (B,); k/v_scale (P, bs, KH) f32 when the pools are
+    quantized.  Returns (out (B, C, H, DV), visits (B, KH))."""
     B, C, H, D = q.shape
     bs, KH, DV = k_pool.shape[1], k_pool.shape[2], v_pool.shape[3]
     NB = block_tables.shape[1]
     G = H // KH
     CG = C * G
     scale = scale if scale is not None else D ** -0.5
+    quantized = k_scale is not None
 
     # (B, C, KH, G, D) -> (B, KH, C*G, D): row r is query (r // G, r % G)
     qg = q.reshape(B, C, KH, G, D).transpose(0, 2, 1, 3, 4) \
         .reshape(B, KH, CG, D)
     kernel = functools.partial(_kernel, scale=scale, window=window,
-                               block_size=bs, group=G)
+                               block_size=bs, group=G, quantized=quantized)
 
     def _kv_index(b, h, j, lens, starts, tables):
-        # skip the DMA for blocks past the sequence: read the null block
-        return (jnp.where(j * bs < lens[b], tables[b, j], 0), 0, h, 0)
+        # skip the DMA for fully-masked blocks — past the sequence's
+        # length, or wholly left of the sliding window: read null block 0
+        live = _block_live(j, lens[b], starts[b], window=window,
+                           block_size=bs)
+        return (jnp.where(live, tables[b, j], 0), 0, h, 0)
+
+    def _scale_index(b, h, j, lens, starts, tables):
+        live = _block_live(j, lens[b], starts[b], window=window,
+                           block_size=bs)
+        return (jnp.where(live, tables[b, j], 0), 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, CG, D),
+                     lambda b, h, j, lens, starts, tables: (b, h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, D), _kv_index),
+        pl.BlockSpec((1, bs, 1, DV), _kv_index),
+    ]
+    operands = [qg, k_pool, v_pool]
+    if quantized:
+        # scales ride as two extra operands addressed by the same index
+        # map as their pools, so a skipped KV DMA skips its scales too
+        in_specs += [pl.BlockSpec((1, bs, 1), _scale_index),
+                     pl.BlockSpec((1, bs, 1), _scale_index)]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, KH, NB),
-        in_specs=[
-            pl.BlockSpec((1, 1, CG, D),
-                         lambda b, h, j, lens, starts, tables: (b, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, D), _kv_index),
-            pl.BlockSpec((1, bs, 1, DV), _kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, CG, DV),
                          lambda b, h, j, lens, starts, tables: (b, h, 0, 0)),
@@ -146,7 +198,7 @@ def _paged_attention(q, k_pool, v_pool, block_tables, q_starts, kv_lens, *,
                    jax.ShapeDtypeStruct((B, KH), jnp.int32)],
         interpret=interpret,
     )(kv_lens.astype(jnp.int32), q_starts.astype(jnp.int32),
-      block_tables.astype(jnp.int32), qg, k_pool, v_pool)
+      block_tables.astype(jnp.int32), *operands)
     out = out.reshape(B, KH, C, G, DV).transpose(0, 2, 1, 3, 4) \
         .reshape(B, C, H, DV)
     return out, visits
@@ -155,11 +207,13 @@ def _paged_attention(q, k_pool, v_pool, block_tables, q_starts, kv_lens, *,
 def paged_attention_kernel(q, k_pool, v_pool, block_tables, kv_lens, *,
                            window: int = 0, scale: float | None = None,
                            interpret: bool = True,
-                           return_visits: bool = False):
+                           return_visits: bool = False,
+                           k_scale=None, v_scale=None):
     """Decode entry point: q (B, H, D), one query token at ``kv_len - 1``."""
     out, visits = _paged_attention(
         q[:, None], k_pool, v_pool, block_tables, kv_lens - 1, kv_lens,
-        window=window, scale=scale, interpret=interpret)
+        window=window, scale=scale, interpret=interpret,
+        k_scale=k_scale, v_scale=v_scale)
     out = out[:, 0]
     return (out, visits) if return_visits else out
 
@@ -168,11 +222,13 @@ def paged_prefill_attention_kernel(q, k_pool, v_pool, block_tables,
                                    q_starts, kv_lens, *, window: int = 0,
                                    scale: float | None = None,
                                    interpret: bool = True,
-                                   return_visits: bool = False):
+                                   return_visits: bool = False,
+                                   k_scale=None, v_scale=None):
     """Prefill entry point: q (B, C, H, D), C query tokens starting at
     ``q_starts``; ``kv_lens = q_starts + valid`` (rows past a sequence's
     valid count produce garbage the caller discards)."""
     out, visits = _paged_attention(
         q, k_pool, v_pool, block_tables, q_starts, kv_lens,
-        window=window, scale=scale, interpret=interpret)
+        window=window, scale=scale, interpret=interpret,
+        k_scale=k_scale, v_scale=v_scale)
     return (out, visits) if return_visits else out

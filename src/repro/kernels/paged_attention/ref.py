@@ -11,6 +11,8 @@ Shapes:
   block_tables (B, NB) int32     pool index of each logical block
   kv_lens      (B,)    int32     valid tokens per sequence (incl. current)
   window       int | (B,) array  0 = full causal; >0 = sliding window
+  k/v_scale    (P, bs, KH) f32   per-write dequant scales when the pools
+                                 are quantized (int8 / fp8-e4m3)
 
 Output (B, H, DV).  The reference materializes the gathered history
 (B, NB*bs, KH, D); the Pallas kernel never does.
@@ -20,12 +22,28 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.paged_attention.quant import dequantize
+
 NEG_INF = -1e30
+
+
+def _gather_kv(pool, block_tables, scale):
+    """Gather (B, S, KH, d) history from the pool, dequantizing with the
+    identically-gathered scales when given — the same bytes->values rule
+    as the kernel's fused epilogue, applied after materialization."""
+    B, NB = block_tables.shape
+    bs = pool.shape[1]
+    out = pool[block_tables].reshape(B, NB * bs, pool.shape[2], -1)
+    if scale is not None:
+        out = dequantize(
+            out, scale[block_tables].reshape(B, NB * bs, pool.shape[2]))
+    return out
 
 
 def paged_prefill_attention_reference(q, k_pool, v_pool, block_tables,
                                       q_starts, kv_lens, *, window=0,
-                                      scale: float | None = None
+                                      scale: float | None = None,
+                                      k_scale=None, v_scale=None
                                       ) -> jax.Array:
     """Chunked-prefill oracle: C query tokens per sequence at absolute
     positions ``q_starts + arange(C)`` attend causally over the paged
@@ -38,8 +56,8 @@ def paged_prefill_attention_reference(q, k_pool, v_pool, block_tables,
     G = H // KH
     scale = scale if scale is not None else D ** -0.5
 
-    k = k_pool[block_tables].reshape(B, NB * bs, KH, -1)    # (B, S, KH, D)
-    v = v_pool[block_tables].reshape(B, NB * bs, KH, -1)
+    k = _gather_kv(k_pool, block_tables, k_scale)           # (B, S, KH, D)
+    v = _gather_kv(v_pool, block_tables, v_scale)
 
     qg = q.reshape(B, C, KH, G, D)
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
@@ -60,16 +78,16 @@ def paged_prefill_attention_reference(q, k_pool, v_pool, block_tables,
 
 
 def paged_attention_reference(q, k_pool, v_pool, block_tables, kv_lens, *,
-                              window=0, scale: float | None = None
-                              ) -> jax.Array:
+                              window=0, scale: float | None = None,
+                              k_scale=None, v_scale=None) -> jax.Array:
     B, H, D = q.shape
     bs, KH = k_pool.shape[1], k_pool.shape[2]
     NB = block_tables.shape[1]
     G = H // KH
     scale = scale if scale is not None else D ** -0.5
 
-    k = k_pool[block_tables].reshape(B, NB * bs, KH, -1)   # (B, S, KH, D)
-    v = v_pool[block_tables].reshape(B, NB * bs, KH, -1)
+    k = _gather_kv(k_pool, block_tables, k_scale)          # (B, S, KH, D)
+    v = _gather_kv(v_pool, block_tables, v_scale)
 
     qg = q.reshape(B, KH, G, D)
     s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),

@@ -140,8 +140,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                 spec = model.paged_prefill_input_spec(shape, block_size)
             else:
                 spec = model.paged_verify_input_spec(shape, block_size)
-            cache_sh = shardings_for(mesh, rules, model.paged_cache_axes(),
-                                     spec["cache"])
+            from repro.kernels.paged_attention import is_quantized
+            cache_sh = shardings_for(
+                mesh, rules,
+                model.paged_cache_axes(
+                    quantized=is_quantized(shape.cache_dtype)),
+                spec["cache"])
             slot_axis = "serve_batch" if serve_cell else "batch"
             batch_sh = {
                 k: NamedSharding(mesh, rules.spec(

@@ -80,7 +80,8 @@ def build_engine(cfg, model, params, args, draft_model=None,
         chunk_size=args.chunk_size, prefill_budget=args.prefill_budget,
         prefix_caching=not args.no_prefix_caching,
         spec_k=args.spec_k, spec_ema=args.spec_ema,
-        draft_cache_dtype=args.draft_cache_dtype),
+        draft_cache_dtype=args.draft_cache_dtype,
+        cache_dtype=args.cache_dtype),
         draft_model=draft_model, draft_params=draft_params, mesh=mesh)
 
 
@@ -117,6 +118,10 @@ def main():
     ap.add_argument("--draft-cache-dtype", default="",
                     help="draft KV pool dtype, e.g. bfloat16 "
                          "(default: model dtype)")
+    ap.add_argument("--cache-dtype", default="",
+                    help="target KV pool dtype: float32/bfloat16 cast; "
+                         "int8/fp8_e4m3 quantize with fused kernel "
+                         "dequant (default: model dtype)")
     ap.add_argument("--mesh", default="",
                     help="serving mesh 'DxM' (data x model) or 'auto'; "
                          "empty = single-device engine")

@@ -86,8 +86,8 @@ class Model:
         return tf.paged_verify_step(params, self.cfg, cache, tokens,
                                     positions, slots, block_tables, valid)
 
-    def paged_cache_axes(self) -> dict:
-        return tf.paged_cache_axes(self.cfg)
+    def paged_cache_axes(self, quantized: bool = False) -> dict:
+        return tf.paged_cache_axes(self.cfg, quantized=quantized)
 
     # ----- shapes -----
     def batch_spec(self, shape: ShapeConfig, with_targets: bool) -> dict:
@@ -140,10 +140,16 @@ class Model:
         }
 
     def paged_cache_spec(self, shape: ShapeConfig, block_size: int) -> dict:
-        """Pool-shaped cache SDS: worst-case blocks for (batch, seq_len)."""
+        """Pool-shaped cache SDS: worst-case blocks for (batch, seq_len).
+        ``shape.cache_dtype`` quantizes the KV pools (narrow elements plus
+        per-(block, token, kv-head) f32 scale pools — the dry-run grid's
+        ``paged_decode_q8`` cell, DESIGN.md §11)."""
+        from repro.kernels.paged_attention import is_quantized, pool_dtype
         cfg = self.cfg
         B, S = shape.global_batch, shape.seq_len
-        dt = dtype_of(cfg.dtype)
+        quant = is_quantized(shape.cache_dtype)
+        dt = pool_dtype(shape.cache_dtype) if quant \
+            else dtype_of(shape.cache_dtype or cfg.dtype)
         L = cfg.num_layers
         num_blocks = B * (-(-S // block_size)) + 1
         sds = jax.ShapeDtypeStruct
@@ -153,6 +159,10 @@ class Model:
             spec["k"] = sds((L, num_blocks, block_size, KH, cfg.head_dim_), dt)
             spec["v"] = sds((L, num_blocks, block_size, KH, cfg.v_head_dim_),
                             dt)
+            if quant:
+                for name in ("k_scale", "v_scale"):
+                    spec[name] = sds((L, num_blocks, block_size, KH),
+                                     jnp.float32)
         if cfg.family == "ssm" or cfg.hybrid:
             nh, hp, n = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
             conv_ch = nh * hp + 2 * n

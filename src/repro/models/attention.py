@@ -159,18 +159,24 @@ def attention_decode(params: dict, cfg, x: jax.Array, pos: jax.Array,
     return out, KVCache(ck, cv)
 
 
-def _scatter_kv(k_pool, v_pool, k_new, v_new, block_tables, positions,
-                inchunk=None):
+def _scatter_kv(kv: dict, k_new, v_new, block_tables, positions,
+                inchunk=None) -> dict:
     """Scatter per-token K/V (B, C, KH, hd) into the pool blocks their
     absolute ``positions`` (B, C) map to through ``block_tables`` (B, NB).
-    ``inchunk`` (B, C) bool masks padding: masked tokens (and positions
-    pointing past the table) are redirected to the reserved null block 0,
-    where writes are harmless by construction.  Shared by the paged
-    decode, chunked-prefill and speculative-verify paths, so the "where
-    does a token's KV land" rule exists exactly once.  Writes cast to the
-    pool dtype: a draft pool may be allocated narrower than the compute
-    dtype (``ServeConfig.draft_cache_dtype`` — rejections cost speed,
-    never correctness)."""
+
+    ``kv`` is one layer's pool slice: ``{"k", "v"}`` plus, when the pool
+    is quantized, ``{"k_scale", "v_scale"}`` (P, bs, KH) f32.  ``inchunk``
+    (B, C) bool masks padding: masked tokens (and positions pointing past
+    the table) are redirected to the reserved null block 0, where writes
+    are harmless by construction.  Shared by the paged decode,
+    chunked-prefill and speculative draft/verify paths, so the "where
+    does a token's KV land — and what bytes does it land as" rule exists
+    exactly once.  Plain narrow pools cast on write (a draft pool may be
+    allocated narrower than the compute dtype —
+    ``ServeConfig.draft_cache_dtype``); quantized pools quantize
+    symmetrically on write, storing the per-(token, kv-head) scale at the
+    same (block, offset) coordinates (DESIGN.md §11)."""
+    k_pool, v_pool = kv["k"], kv["v"]
     bs, NB = k_pool.shape[1], block_tables.shape[1]
     blk_idx = jnp.clip(positions // bs, 0, NB - 1)
     blk = jnp.take_along_axis(block_tables, blk_idx, axis=1)
@@ -178,44 +184,54 @@ def _scatter_kv(k_pool, v_pool, k_new, v_new, block_tables, positions,
     if inchunk is not None:
         blk = jnp.where(inchunk, blk, 0)
         off = jnp.where(inchunk, off, 0)
-    return (k_pool.at[blk, off].set(k_new.astype(k_pool.dtype)),
-            v_pool.at[blk, off].set(v_new.astype(v_pool.dtype)))
+    if "k_scale" in kv:
+        from repro.kernels.paged_attention import quantize
+        qk, sk = quantize(k_new, k_pool.dtype)
+        qv, sv = quantize(v_new, v_pool.dtype)
+        return {"k": k_pool.at[blk, off].set(qk),
+                "v": v_pool.at[blk, off].set(qv),
+                "k_scale": kv["k_scale"].at[blk, off].set(sk),
+                "v_scale": kv["v_scale"].at[blk, off].set(sv)}
+    return {"k": k_pool.at[blk, off].set(k_new.astype(k_pool.dtype)),
+            "v": v_pool.at[blk, off].set(v_new.astype(v_pool.dtype))}
 
 
 def attention_paged_decode(params: dict, cfg, x: jax.Array,
-                           positions: jax.Array, k_pool: jax.Array,
-                           v_pool: jax.Array, block_tables: jax.Array,
-                           window=0) -> tuple[jax.Array, jax.Array, jax.Array]:
+                           positions: jax.Array, kv: dict,
+                           block_tables: jax.Array,
+                           window=0) -> tuple[jax.Array, dict]:
     """One-token decode over a paged KV pool (continuous batching).
 
     x (B,1,d); positions (B,) int32 — per-sequence write index (sequences in
     a serving batch are at *different* depths, unlike ``attention_decode``'s
-    single scalar pos).  k/v_pool (P, bs, KH, hd/vhd) are one layer's slice
-    of the shared block pool; block_tables (B, NB) maps logical to pool
-    blocks.  window: python int for static masking (Pallas-able) or a (B,)
-    array for per-sequence dynamic windows (hybrid layers; reference path).
+    single scalar pos).  ``kv`` is one layer's pool slice ``{"k", "v"}``
+    (P, bs, KH, hd/vhd), plus ``{"k_scale", "v_scale"}`` when quantized;
+    block_tables (B, NB) maps logical to pool blocks.  window: python int
+    for static masking (Pallas-able) or a (B,) array for per-sequence
+    dynamic windows (hybrid layers; reference path).
 
-    Returns (out (B,1,d), new k_pool, new v_pool).
+    Returns (out (B,1,d), new kv dict).
     """
     from repro.kernels.paged_attention import paged_attention
 
     B = x.shape[0]
     q, k_new, v_new = _qkv(params, cfg, x, positions[:, None])
-    k_pool, v_pool = _scatter_kv(k_pool, v_pool, k_new, v_new,
-                                 block_tables, positions[:, None])
+    kv = _scatter_kv(kv, k_new, v_new, block_tables, positions[:, None])
     qf = q.reshape(B, q.shape[2] * q.shape[3], q.shape[4])
-    o = paged_attention(qf, k_pool, v_pool, block_tables, positions + 1,
-                        window=window, use_kernel=cfg.use_pallas)
+    o = paged_attention(qf, kv["k"], kv["v"], block_tables, positions + 1,
+                        window=window, use_kernel=cfg.use_pallas,
+                        k_scale=kv.get("k_scale"),
+                        v_scale=kv.get("v_scale"))
     o = o[:, None]                                       # (B, 1, H, vhd)
     out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
-    return out, k_pool, v_pool
+    return out, kv
 
 
 def attention_paged_prefill(params: dict, cfg, x: jax.Array,
-                            positions: jax.Array, k_pool: jax.Array,
-                            v_pool: jax.Array, block_tables: jax.Array,
+                            positions: jax.Array, kv: dict,
+                            block_tables: jax.Array,
                             valid: jax.Array, window=0
-                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+                            ) -> tuple[jax.Array, dict]:
     """Chunked-prefill attention over the paged KV pool.
 
     x (B, C, d) — a fixed-size chunk of tokens per sequence, right-padded;
@@ -227,22 +243,22 @@ def attention_paged_prefill(params: dict, cfg, x: jax.Array,
     by prefix caching.  The per-row absolute-position masking makes the
     same path serve speculative verify chunks (``[sampled token, K
     drafts]``): each drafted query sees exactly the history a one-token
-    decode at its position would see.  window as in
-    ``attention_paged_decode``.  Returns (out (B, C, d), new pools).
+    decode at its position would see.  ``kv``/window as in
+    ``attention_paged_decode``.  Returns (out (B, C, d), new kv dict).
     """
     from repro.kernels.paged_attention import paged_prefill_attention
 
     B, C, _ = x.shape
     q, k_new, v_new = _qkv(params, cfg, x, positions)
     inchunk = jnp.arange(C)[None, :] < valid[:, None]
-    k_pool, v_pool = _scatter_kv(k_pool, v_pool, k_new, v_new,
-                                 block_tables, positions, inchunk)
+    kv = _scatter_kv(kv, k_new, v_new, block_tables, positions, inchunk)
     qf = q.reshape(B, C, q.shape[2] * q.shape[3], q.shape[4])
     o = paged_prefill_attention(
-        qf, k_pool, v_pool, block_tables, positions[:, 0],
-        positions[:, 0] + valid, window=window, use_kernel=cfg.use_pallas)
+        qf, kv["k"], kv["v"], block_tables, positions[:, 0],
+        positions[:, 0] + valid, window=window, use_kernel=cfg.use_pallas,
+        k_scale=kv.get("k_scale"), v_scale=kv.get("v_scale"))
     out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
-    return out, k_pool, v_pool
+    return out, kv
 
 
 def attention_flops(cfg, batch: int, seq: int, causal: bool = True) -> int:

@@ -309,18 +309,24 @@ def cache_axes(cfg: ArchConfig, long_context: bool = False) -> dict:
     return axes
 
 
-def paged_cache_axes(cfg: ArchConfig) -> dict:
+def paged_cache_axes(cfg: ArchConfig, quantized: bool = False) -> dict:
     """Logical axes of the paged-pool cache pytree (dry-run sharding and
     the serving engine's sharded jit).  The block-address axes
     (``serve_blocks``, block offset) stay replicated — any slot's blocks
     must be readable from every data shard, and a block is a unit of
     *addressing*, not of parallelism; KV shards over kv_heads (tensor
     parallel) and the per-slot SSM state over the slot (``serve_batch``,
-    data parallel) axis.  See DESIGN.md §10."""
+    data parallel) axis.  ``quantized`` adds the scale-pool leaves, which
+    shard *exactly* like their KV pools minus the head_dim axis: a
+    tensor shard holding a kv-head's bytes holds its scales, and pure-DP
+    per-device replicas carry scales alongside (DESIGN.md §10/§11)."""
     axes: dict[str, Any] = {}
     if cfg.family != "ssm":
         axes["k"] = ("layers", "serve_blocks", None, "kv_heads", None)
         axes["v"] = ("layers", "serve_blocks", None, "kv_heads", None)
+        if quantized:
+            axes["k_scale"] = ("layers", "serve_blocks", None, "kv_heads")
+            axes["v_scale"] = ("layers", "serve_blocks", None, "kv_heads")
     if cfg.family == "ssm" or cfg.hybrid:
         axes["conv"] = ("layers", "serve_batch", None, None)
         axes["state"] = ("layers", "serve_batch", "ssm_heads", None, None)
@@ -424,6 +430,11 @@ def decode_step(params: dict, cfg: ArchConfig, cache: dict,
 # Paged decode (continuous-batching serving; see DESIGN.md §8)
 # ---------------------------------------------------------------------------
 
+# one layer's KV-pool leaves, in cache-dict order (scale pools exist only
+# when the pool is quantized — ServeConfig.cache_dtype, DESIGN.md §11)
+_KV_POOL_KEYS = ("k", "v", "k_scale", "v_scale")
+
+
 def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
                      max_seqs: int, dtype: str | None = None) -> dict:
     """Block-pool KV cache + per-slot SSM state.
@@ -432,16 +443,27 @@ def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
     tokens (block 0 is the reserved null block that idle slots write into);
     SSM/conv state is O(1) per sequence, so it is a plain per-slot tensor —
     paging it would buy nothing.  ``dtype`` overrides the KV pool element
-    type (speculative draft pools tolerate lower precision: a draft
-    rejection costs speed, never correctness — DESIGN.md §9).
+    type: a plain narrow dtype ("bfloat16") casts on write (speculative
+    draft pools tolerate lower precision — a draft rejection costs speed,
+    never correctness, DESIGN.md §9); a quantized dtype ("int8",
+    "fp8_e4m3") additionally allocates per-(block, token, kv-head) f32
+    scale pools mirroring the KV pools' block layout, written by
+    ``_scatter_kv`` and consumed by the kernel's fused dequant epilogue
+    (DESIGN.md §11).
     """
-    dt = dtype_of(dtype or cfg.dtype)
+    from repro.kernels.paged_attention import is_quantized, pool_dtype
+    quant = is_quantized(dtype)
+    dt = pool_dtype(dtype) if quant else dtype_of(dtype or cfg.dtype)
     L = cfg.num_layers
     cache: dict[str, Any] = {}
     if cfg.family != "ssm":
         KH, hd, vhd = cfg.n_kv_heads, cfg.head_dim_, cfg.v_head_dim_
         cache["k"] = jnp.zeros((L, num_blocks, block_size, KH, hd), dt)
         cache["v"] = jnp.zeros((L, num_blocks, block_size, KH, vhd), dt)
+        if quant:
+            for name in ("k_scale", "v_scale"):
+                cache[name] = jnp.zeros((L, num_blocks, block_size, KH),
+                                        jnp.float32)
     if cfg.family == "ssm" or cfg.hybrid:
         # recurrent state keeps the compute dtype: it is carried, not
         # re-derived, so narrowing it would compound per step
@@ -483,10 +505,10 @@ def paged_decode_step(params: dict, cfg: ArchConfig, cache: dict,
             win = jnp.broadcast_to(win, (B,))    # dynamic -> reference path
         else:
             win = 0
-        a_out, kp, vp = attn.attention_paged_decode(
-            ap, cfg, hn, positions, lc["k"], lc["v"], block_tables,
-            window=win)
-        return a_out, {"k": kp, "v": vp}
+        kv = {n: lc[n] for n in _KV_POOL_KEYS if n in lc}
+        a_out, kv = attn.attention_paged_decode(
+            ap, cfg, hn, positions, kv, block_tables, window=win)
+        return a_out, kv
 
     def ssm_fn(sp, hn, lc):
         sc = ssm_mod.SSMCache(
@@ -526,10 +548,10 @@ def _paged_chunk_forward(params: dict, cfg: ArchConfig, cache: dict,
             win = jnp.broadcast_to(win, (B,))    # dynamic -> reference path
         else:
             win = 0
-        a_out, kp, vp = attn.attention_paged_prefill(
-            ap, cfg, hn, positions, lc["k"], lc["v"], block_tables, valid,
-            window=win)
-        return a_out, {"k": kp, "v": vp}
+        kv = {n: lc[n] for n in _KV_POOL_KEYS if n in lc}
+        a_out, kv = attn.attention_paged_prefill(
+            ap, cfg, hn, positions, kv, block_tables, valid, window=win)
+        return a_out, kv
 
     def ssm_fn(sp, hn, lc):
         conv = jnp.where(fresh[:, None, None], 0, lc["conv"][slots])

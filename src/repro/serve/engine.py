@@ -41,6 +41,15 @@ cached full blocks into new requests' tables; the scheduler hands back
 copy-on-write (src, dst) pool copies which the engine runs on device
 (on both pools in spec mode) before the step.
 
+Quantized KV pools (``cache_dtype="int8"``/``"fp8_e4m3"``, DESIGN.md
+§11): the pools store 1-byte elements plus per-(token, kv-head) f32
+scale pools that share the KV pools' block addressing — ``_scatter_kv``
+quantizes on write, the paged-attention kernel dequantizes in its load
+epilogue, and the engine's only added duty is COWing the scale pools
+alongside k/v.  Host bookkeeping is unchanged, so scheduler behavior is
+byte-identical across cache dtypes; ~3.8x more history fits per HBM
+byte vs f32 (benchmarks/serving.py --cache-dtype).
+
 Host<->device traffic is one batched transfer per step: every sampled
 token, acceptance count and prefill logit the host needs is fetched in a
 single ``jax.device_get`` (``stats["host_syncs"]``; asserted in
@@ -73,6 +82,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import tree_shardings, use_rules
+from repro.kernels.paged_attention import CACHE_DTYPES, is_quantized
 from repro.serve.kv_cache import PagedCache
 from repro.serve.scheduler import FCFSScheduler, Request, RequestState
 
@@ -93,6 +103,11 @@ class ServeConfig:
     draft_cache_dtype: str = ""       # "" = draft pool in the model dtype;
                                       # e.g. "bfloat16" narrows the draft
                                       # KV pool (lossless under verify)
+    cache_dtype: str = ""             # target KV pool dtype: "" = model
+                                      # dtype; "float32"/"bfloat16" cast;
+                                      # "int8"/"fp8_e4m3" quantize with
+                                      # per-write scale pools and fused
+                                      # kernel dequant (DESIGN.md §11)
 
     @property
     def blocks_per_seq(self) -> int:
@@ -165,16 +180,23 @@ class Engine:
             if (self._data_shards > 1 and mesh.shape.get("model", 1) == 1
                     and model.cfg.family != "ssm" and not model.cfg.hybrid):
                 self.shard_mode = "dp"
+        for field in ("cache_dtype", "draft_cache_dtype"):
+            if getattr(self.cfg, field) not in CACHE_DTYPES:
+                raise ValueError(f"{field} {getattr(self.cfg, field)!r} "
+                                 f"not in {CACHE_DTYPES}")
         self.cache = model.init_paged_cache(
             num_blocks=self.cfg.pool_blocks(),
             block_size=self.cfg.block_size,
-            max_seqs=self.cfg.max_seqs)
+            max_seqs=self.cfg.max_seqs,
+            dtype=self.cfg.cache_dtype or None)
         if mesh is not None:
             self._params_sh = tree_shardings(mesh, self.rules,
                                              model.param_axes(), params)
-            self._cache_sh = tree_shardings(mesh, self.rules,
-                                            model.paged_cache_axes(),
-                                            self.cache)
+            self._cache_sh = tree_shardings(
+                mesh, self.rules,
+                model.paged_cache_axes(
+                    quantized=is_quantized(self.cfg.cache_dtype)),
+                self.cache)
             self.params = jax.device_put(params, self._params_sh)
             self.cache = jax.device_put(self.cache, self._cache_sh)
         self._step_fn = self._make_fn(self._step_impl, "step", (1,))
@@ -206,7 +228,9 @@ class Engine:
                 self._draft_params_sh = tree_shardings(
                     mesh, self.rules, draft_model.param_axes(), draft_params)
                 self._draft_cache_sh = tree_shardings(
-                    mesh, self.rules, draft_model.paged_cache_axes(),
+                    mesh, self.rules,
+                    draft_model.paged_cache_axes(
+                        quantized=is_quantized(self.cfg.draft_cache_dtype)),
                     self.draft_cache)
                 self.draft_params = jax.device_put(draft_params,
                                                    self._draft_params_sh)
@@ -395,7 +419,9 @@ class Engine:
         return cache
 
     def _cow_impl(self, cache, src, dst):
-        for name in ("k", "v"):
+        # scale pools COW in lockstep with their KV pools: a copied block
+        # is meaningless without the scales its bytes were written under
+        for name in ("k", "v", "k_scale", "v_scale"):
             if name in cache:
                 cache[name] = cache[name].at[:, dst].set(cache[name][:, src])
         return cache

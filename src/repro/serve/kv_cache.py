@@ -32,6 +32,15 @@ covers the entire sequence (the model must still *see* that token to
 produce logits); ``prepare_write`` detects ref>1 blocks in the write
 range and hands the engine (src, dst) pool copies to run on device.
 
+Quantized pools (DESIGN.md §11): the host tracks *blocks*, never scale
+values — the per-(token, kv-head) scale pools share the KV pools' block
+addressing, so every transition this module performs (alias/incref on a
+prefix hit, the COW (src, dst) pairs ``prepare_write`` hands the engine,
+``truncate`` rollback, release, eviction) moves a block's scales in
+lockstep with its bytes by construction.  The one device-side obligation
+is the engine's: its COW copy must cover the scale pools alongside k/v
+(``Engine._cow_impl``; shadow-asserted in test_serve_properties.py).
+
 Speculative append/rollback (DESIGN.md §9): a speculative decode cycle
 grows a slot by K+1 tokens up front (``ensure``), writes drafted K/V into
 the reserved range, and after verification rolls the rejected suffix back

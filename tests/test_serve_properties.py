@@ -21,6 +21,16 @@ after every operation.  The hypothesis variants explore the same drivers
 from minimized counterexamples; the seeded fallback keeps the properties
 exercised where hypothesis isn't installed (it is optional, see
 requirements.txt).
+
+The scheduler driver additionally carries a *device-pool shadow* for
+quantized caches (DESIGN.md §11): per-block write stamps for the KV
+bytes and their dequant scales.  The engine writes both through one
+``_scatter_kv`` and COWs both through one ``_cow_impl``; the host moves
+blocks purely by index, so scale blocks must obey exactly the KV blocks'
+conservation/COW/truncate oracle — the shadow replays every block
+movement the plan exposes and asserts the two pools can never disagree
+about a block's contents, and that every COW pair is scale-safe (dst
+freshly allocated sole-owner, src still holding valid bytes+scales).
 """
 import random
 
@@ -116,6 +126,21 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
     spec_k = rng.choice([0, 0, 2, 3])
     rid = 0
 
+    # quantized-pool shadow: (kv bytes, scales) write stamps per block
+    kv_stamp: dict[int, int] = {}
+    sc_stamp: dict[int, int] = {}
+    clock = [0]
+
+    def write_blocks(slot, lo, hi):
+        """Simulate _scatter_kv over token positions [lo, hi): the engine
+        stamps a block's KV bytes and its scales in the same scatter."""
+        clock[0] += 1
+        for bi in range(lo // bs, (max(hi, lo + 1) - 1) // bs + 1):
+            b = int(cache.tables[slot][bi])
+            assert b != 0                  # never writes the null block
+            kv_stamp[b] = clock[0]
+            sc_stamp[b] = clock[0]
+
     for _ in range(rounds):
         if rng.random() < 0.4:
             # vocab {0,1} prompts: prefix collisions (and so sharing, COW
@@ -134,9 +159,20 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
             cache.check()
             return
         cache.check()
+        for src, dst in plan.copies:
+            # scale-safety of COW: the target is a freshly-allocated
+            # sole-owner block, and the source still holds valid
+            # bytes+scales (live for a donor, never already freed)
+            assert cache.allocator.ref(dst) == 1
+            assert cache.allocator.ref(src) >= 1 \
+                or src in cache.allocator._cached
+            if src in kv_stamp:            # _cow_impl copies all 4 pools
+                kv_stamp[dst] = kv_stamp[src]
+                sc_stamp[dst] = sc_stamp[src]
         for s, n in plan.prefill:
             assert 0 < n <= max(chunk, 1)
             covered = s.num_cached + n == s.seq_len
+            write_blocks(s.slot, s.num_cached, s.num_cached + n)
             s.num_cached += n
             if covered:
                 s.generated.append(rng.randint(0, 1))
@@ -148,6 +184,12 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
                 # tokens, then rollback releases the rejected suffix —
                 # possibly rolling into a COW-shared or indexed block
                 assert was_last
+                # the engine writes the base token + K drafts up front,
+                # then truncates the rejected suffix — the shadow stamps
+                # every reserved block the device pass would touch
+                hi = min(s.num_cached + spec_k + 1,
+                         len(cache.owned(s.slot)) * bs)
+                write_blocks(s.slot, s.num_cached, hi)
                 a = rng.randint(0, spec_k)
                 emit = a + (1 if a < spec_k else 0)
                 for _ in range(emit):
@@ -158,6 +200,7 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
                 cache.truncate(s.slot, s.num_cached)
                 cache.check()
                 continue
+            write_blocks(s.slot, s.num_cached, s.num_cached + 1)
             s.num_cached += 1
             if was_last:
                 s.generated.append(rng.randint(0, 1))
@@ -168,6 +211,11 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
         # conservation, stated exactly as the issue demands:
         alloc = cache.allocator
         assert alloc.num_free + alloc.num_live + alloc.num_cached == usable
+        # scale lockstep: no host transition (alias, COW, truncate,
+        # release, eviction) can make the scale pool disagree with the
+        # KV pool about any block — addressing is shared, so the stamps
+        # can only diverge if a path moved KV without its scales
+        assert kv_stamp == sc_stamp
     # drain what's left so release paths run too
     for s in list(sched.running):
         s.stopped = True

@@ -157,6 +157,29 @@ def test_sharded_spec_decode_matches_one_device(key):
         assert stats["spec_cycles"] > 0
 
 
+def test_sharded_quantized_cache_matches_one_device(key):
+    """Quantized pools under a sharded mesh: the scale pools shard
+    exactly like their KV pools (kv_heads tensor-parallel, per-device
+    replicas in pure DP), so an int8 engine on any mesh must be
+    byte-identical to the 1-device int8 engine — decode, chunked prefill,
+    prefix/COW and all (DESIGN.md §11)."""
+    m, params = _models(key, False)
+    rng = np.random.default_rng(23)
+    common = [int(t) for t in rng.integers(0, m.cfg.vocab_size, 8)]
+    prompts = [common + [int(t) for t in rng.integers(0, 100, 2 + i % 3)]
+               for i in range(4)]
+    sc = ServeConfig(max_seqs=4, block_size=4, max_len=40, chunk_size=8,
+                     cache_dtype="int8")
+    ref, _ = _serve(Engine(m, params, sc), prompts)
+    for dm in _mesh_shapes():
+        eng = Engine(m, params, sc, mesh=make_serve_mesh(*dm))
+        assert eng.cache["k"].dtype == jnp.int8
+        assert "k_scale" in eng.cache
+        out, _ = _serve(eng, prompts)
+        assert out == ref, (dm, eng.shard_mode)
+        eng.cache_host.check()
+
+
 def test_sharded_pallas_kernel_matches_one_device(key):
     """use_pallas engines route paged attention through the kernel; under
     a sharded mesh the kernel call is shard_map'd per device (gspmd mode)

@@ -57,7 +57,7 @@ def test_cell_support_matrix():
     from repro.configs import cell_supported, ASSIGNED_ARCHS
     rows = {(a, s): cell_supported(get_config(a), SHAPES[s])[0]
             for a in ASSIGNED_ARCHS for s in SHAPES}
-    assert sum(rows.values()) == 65          # documented runnable cells
+    assert sum(rows.values()) == 73          # documented runnable cells
     assert not rows[("qwen3-1.7b", "long_500k")]
     assert rows[("mamba2-1.3b", "long_500k")]
     assert rows[("hymba-1.5b", "long_500k")]
@@ -77,6 +77,12 @@ def test_cell_support_matrix():
     assert rows[("tinyllama-1.1b", "paged_decode_sharded")]
     assert rows[("mamba2-1.3b", "paged_decode_sharded")]
     assert not rows[("hubert-xlarge", "paged_decode_sharded")]
+    # quantized-cache step (DESIGN.md §11): needs a KV pool to quantize —
+    # hybrid attention+SSM qualifies, pure-SSM does not
+    assert rows[("tinyllama-1.1b", "paged_decode_q8")]
+    assert rows[("hymba-1.5b", "paged_decode_q8")]
+    assert not rows[("mamba2-1.3b", "paged_decode_q8")]
+    assert not rows[("hubert-xlarge", "paged_decode_q8")]
 
 
 def test_dryrun_paged_cells_lower(tmp_path, monkeypatch):
@@ -93,19 +99,22 @@ def test_dryrun_paged_cells_lower(tmp_path, monkeypatch):
                remat=False)
     out = tmp_path / "dryrun_paged.json"
     records = []
-    for shape in ("paged_decode_32k", "paged_prefill_512", "spec_verify_8",
-                  "paged_decode_sharded"):
+    shapes = ("paged_decode_32k", "paged_prefill_512", "spec_verify_8",
+              "paged_decode_sharded", "paged_decode_q8")
+    for shape in shapes:
         rec, _ = dryrun.lower_cell("tinyllama-1.1b", shape, False,
                                    opt_overrides=red)
         assert rec["status"] == "ok", rec
         assert rec["flops_per_device"] > 0
         records.append(rec)
+    # the quantized cell's cache argument is smaller than the f32 cell's:
+    # that's the bytes/token cut the roofline reports (DESIGN.md §11)
+    by = {r["shape"]: r for r in records}
+    assert by["paged_decode_q8"]["memory"]["argument_bytes"] < \
+        by["paged_decode_32k"]["memory"]["argument_bytes"]
     out.write_text(json.dumps(records))
     rows = json.loads(out.read_text())        # artifact round-trips
-    assert {r["shape"] for r in rows} == {"paged_decode_32k",
-                                          "paged_prefill_512",
-                                          "spec_verify_8",
-                                          "paged_decode_sharded"}
+    assert {r["shape"] for r in rows} == set(shapes)
 
 
 @pytest.mark.slow
@@ -126,27 +135,41 @@ def test_dryrun_subprocess_small():
 
 
 def test_dryrun_results_complete():
-    """The committed baseline sweep must cover all 160 cells with 0 errors
-    (10 archs x 8 shapes x 2 meshes; the paged serving cells joined with
+    """The committed baseline sweep must cover all 180 cells with 0 errors
+    (10 archs x 9 shapes x 2 meshes; the paged serving cells joined with
     the prefill-subsystem PR, spec_verify_8 with the speculative-decoding
-    PR, paged_decode_sharded with the sharded-serving PR).  Skips are
-    exactly the structural ones: encoder-only archs have no decode path,
-    full-attention archs cannot serve 500k ctx, and recurrent families
-    cannot rewind speculative state."""
+    PR, paged_decode_sharded with the sharded-serving PR, paged_decode_q8
+    with the quantized-cache PR).  Skips are exactly the structural ones:
+    encoder-only archs have no decode path, full-attention archs cannot
+    serve 500k ctx, recurrent families cannot rewind speculative state,
+    and pure-SSM archs have no KV pool to quantize."""
     path = os.path.join(os.path.dirname(__file__), "..", "results",
                         "dryrun_baseline.json")
     if not os.path.exists(path):
         pytest.skip("baseline sweep not generated yet")
     rows = json.load(open(path))
-    assert len(rows) == 160
+    assert len(rows) == 180
     by = {}
     for r in rows:
         by.setdefault(r["status"], []).append(r)
     assert "error" not in by, by.get("error")
-    assert len(by["ok"]) == 130 and len(by["skipped"]) == 30
+    assert len(by["ok"]) == 146 and len(by["skipped"]) == 34
     spec = [r for r in rows if r["shape"] == "spec_verify_8"]
     assert len(spec) == 20
     assert sum(r["status"] == "ok" for r in spec) == 14
     shard = [r for r in rows if r["shape"] == "paged_decode_sharded"]
     assert len(shard) == 20
     assert sum(r["status"] == "ok" for r in shard) == 18
+    q8 = [r for r in rows if r["shape"] == "paged_decode_q8"]
+    assert len(q8) == 20
+    assert sum(r["status"] == "ok" for r in q8) == 16
+    # the quantized cell moves fewer cache bytes than its f32 twin on
+    # every arch that runs both (the point of the cell)
+    f32 = {(r["arch"], r["multi_pod"]): r for r in rows
+           if r["shape"] == "paged_decode_32k" and r["status"] == "ok"}
+    for r in q8:
+        if r["status"] != "ok":
+            continue
+        twin = f32[(r["arch"], r["multi_pod"])]
+        assert r["memory"]["argument_bytes"] < \
+            twin["memory"]["argument_bytes"], r["arch"]
