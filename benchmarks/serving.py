@@ -37,6 +37,16 @@ reported, and at an equal pool-byte budget int8 must sustain >= 1.5x the
 concurrent slots fp32 can hold without preemption
 (``results/serving_quant.json`` CI artifact).
 
+With ``--arrival-rate R``, the open-loop latency section runs instead
+(DESIGN.md §12): requests arrive on a Poisson process at R req/s driven
+by the wall clock — unlike the closed-loop sweeps above, the engine
+cannot slow arrivals down, so queueing delay is visible and TTFT
+includes time spent waiting for a slot.  Reports p50/p99 TTFT,
+per-output-token latency (TPOT) and queue wait from the engine's
+request-lifecycle telemetry, writes ``results/serving_latency.json``
+and a Perfetto-loadable Chrome trace of the run
+(``results/serving_trace.json``; both CI artifacts).
+
 With ``--sharded``, the mesh-aware serving section runs (DESIGN.md §10):
 for N in {1, 2, 4} a subprocess is forced to N host-platform devices
 (``XLA_FLAGS=--xla_force_host_platform_device_count=N``; the device count
@@ -547,6 +557,110 @@ def quant_rows(dtypes_arg: str, out_path: str | None = None) -> list[str]:
 
 
 # ---------------------------------------------------------------------------
+# Open-loop latency (--arrival-rate): Poisson arrivals, TTFT/TPOT tails
+# ---------------------------------------------------------------------------
+
+LAT_PROMPT, LAT_GEN, LAT_NREQ = 24, 16, 32
+
+
+def _percentiles(xs) -> dict[str, float]:
+    a = np.asarray(xs, np.float64)
+    return {"p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean())}
+
+
+def latency_rows(rate: float, out_path: str | None = None,
+                 trace_path: str | None = None) -> list[str]:
+    """Open-loop Poisson load (DESIGN.md §12): arrival times are drawn
+    up-front from exponential inter-arrivals at ``rate`` req/s and the
+    drive loop submits each request when the wall clock passes its
+    arrival — the engine cannot backpressure the arrival process, so
+    queueing delay shows up in TTFT exactly as it would for real
+    traffic.  Tail latency comes from the engine's own lifecycle
+    telemetry (``FinishedRequest.ttft_s/tpot_s/queue_wait_s``), which is
+    wall-clock-correct under manual ``step()`` driving; the same run's
+    phase timers and pool gauges are exported as a Chrome trace."""
+    from repro.obs import Telemetry, write_chrome
+
+    cfg = bench_cfg()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    prompts = [[int(t) for t in rng.integers(0, cfg.vocab_size,
+                                             LAT_PROMPT - 4 * (i % 3))]
+               for i in range(LAT_NREQ)]
+
+    eng = Engine(model, params, ServeConfig(
+        max_seqs=8, block_size=16, max_len=LAT_PROMPT + LAT_GEN,
+        chunk_size=16))
+    for p in prompts[:4]:                       # compile outside the run
+        eng.add_request(p, max_new_tokens=LAT_GEN)
+    eng.run()
+
+    # fresh telemetry AFTER compile: the trace and histograms cover only
+    # the measured run (reset() rebinds the run counters to the new
+    # registry)
+    tel = Telemetry(enabled=True)
+    eng.obs = tel
+    eng.reset()
+
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, LAT_NREQ))
+    t0 = time.perf_counter()
+    nxt = 0
+    while nxt < LAT_NREQ or eng.scheduler.has_work:
+        now = time.perf_counter() - t0
+        while nxt < LAT_NREQ and arrivals[nxt] <= now:
+            eng.add_request(prompts[nxt], max_new_tokens=LAT_GEN)
+            nxt += 1
+        if eng.scheduler.has_work:
+            eng.step()
+        elif nxt < LAT_NREQ:                    # idle until the next arrival
+            time.sleep(min(arrivals[nxt] - now, 0.01))
+    makespan = time.perf_counter() - t0
+
+    recs = eng.finished()
+    assert len(recs) == LAT_NREQ
+    ttft = _percentiles([r.ttft_s for r in recs.values()])
+    tpot = _percentiles([r.tpot_s for r in recs.values()
+                         if len(r.tokens) > 1])
+    qwait = _percentiles([r.queue_wait_s for r in recs.values()])
+    n_new = sum(len(r.tokens) for r in recs.values())
+
+    rows = [
+        f"serving_lat_ttft_p50,{ttft['p50'] * 1e6:.0f},"
+        f"{ttft['p50'] * 1e3:.1f}ms TTFT p50 (open loop, "
+        f"{rate:g} req/s Poisson, {LAT_NREQ} reqs)",
+        f"serving_lat_ttft_p99,{ttft['p99'] * 1e6:.0f},"
+        f"{ttft['p99'] * 1e3:.1f}ms TTFT p99 "
+        f"(queue wait p99 {qwait['p99'] * 1e3:.1f}ms)",
+        f"serving_lat_tpot_p50,{tpot['p50'] * 1e6:.0f},"
+        f"{tpot['p50'] * 1e3:.1f}ms/token p50 after first token",
+        f"serving_lat_tpot_p99,{tpot['p99'] * 1e6:.0f},"
+        f"{tpot['p99'] * 1e3:.1f}ms/token p99 "
+        f"({n_new / makespan:.1f} tok/s over the {makespan:.1f}s run)",
+    ]
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        phases = {k.split("/", 1)[1]: h.summary()
+                  for k, h in tel.registry.histograms.items()
+                  if k.startswith("phase/")}
+        with open(out_path, "w") as f:
+            json.dump({"rows": rows, "arrival_rate": rate,
+                       "requests": LAT_NREQ, "gen": LAT_GEN,
+                       "makespan_s": makespan,
+                       "ttft_s": ttft, "tpot_s": tpot,
+                       "queue_wait_s": qwait,
+                       "phases_s": phases,
+                       "counters": tel.registry.counter_values()}, f,
+                      indent=1)
+    if trace_path:
+        os.makedirs(os.path.dirname(trace_path) or ".", exist_ok=True)
+        write_chrome(tel.trace, trace_path)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Sharded serving (--sharded): data-parallel slots, byte-identical outputs
 # ---------------------------------------------------------------------------
 
@@ -710,10 +824,17 @@ if __name__ == "__main__":
                     help="run the quantized-KV-pool sweep; optional "
                          "comma-separated dtypes (default bfloat16,int8; "
                          "fp32 baseline always included)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="run the open-loop Poisson latency section at "
+                         "this many req/s (TTFT/TPOT p50+p99)")
     ap.add_argument("--sharded-worker", default=None, metavar="DxM",
                     help=argparse.SUPPRESS)   # internal subprocess mode
     ap.add_argument("--out", default=None,
-                    help="write rows + stats as JSON (--spec/--sharded)")
+                    help="write rows + stats as JSON "
+                         "(--spec/--sharded/--arrival-rate)")
+    ap.add_argument("--trace-out", default=None,
+                    help="with --arrival-rate: write a Chrome trace of "
+                         "the run (load in https://ui.perfetto.dev)")
     args = ap.parse_args()
     if args.sharded_worker:
         d, m = (int(p) for p in args.sharded_worker.split("x"))
@@ -722,6 +843,9 @@ if __name__ == "__main__":
         rows = (spec_rows(args.out) if args.spec
                 else sharded_rows(args.out) if args.sharded
                 else quant_rows(args.cache_dtype, args.out)
-                if args.cache_dtype else run())
+                if args.cache_dtype
+                else latency_rows(args.arrival_rate, args.out,
+                                  args.trace_out)
+                if args.arrival_rate else run())
         for r in rows:
             print(r)

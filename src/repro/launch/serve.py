@@ -28,6 +28,13 @@ tokens per cycle, verified in one multi-token target pass (outputs stay
 distribution-identical; see DESIGN.md §9).  SSM/hybrid families are
 capability-gated back to dense-only decode.
 
+``--metrics`` prints the serving telemetry after the run — per-phase
+p50/p99 step timings, pool gauges and the full Prometheus-format metric
+dump — and ``--trace-out PATH`` writes a Chrome-trace JSON of the run
+(step phases as duration slices, requests as async spans, pool
+occupancy as counter tracks) loadable in https://ui.perfetto.dev or
+chrome://tracing (repro.obs; DESIGN.md §12).
+
 ``generate`` (sequential, token-by-token) is kept as the correctness
 oracle the engine is tested against (tests/test_serve.py).
 """
@@ -38,6 +45,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.data.synthetic import batches
@@ -66,7 +74,7 @@ def generate(model, params, prompt: jax.Array, gen_len: int,
 
 
 def build_engine(cfg, model, params, args, draft_model=None,
-                 draft_params=None):
+                 draft_params=None, telemetry=None):
     from repro.launch.mesh import parse_mesh
     from repro.serve import Engine, ServeConfig
     mesh = parse_mesh(args.mesh) if args.mesh else None
@@ -82,7 +90,8 @@ def build_engine(cfg, model, params, args, draft_model=None,
         spec_k=args.spec_k, spec_ema=args.spec_ema,
         draft_cache_dtype=args.draft_cache_dtype,
         cache_dtype=args.cache_dtype),
-        draft_model=draft_model, draft_params=draft_params, mesh=mesh)
+        draft_model=draft_model, draft_params=draft_params, mesh=mesh,
+        telemetry=telemetry)
 
 
 def main():
@@ -125,6 +134,12 @@ def main():
     ap.add_argument("--mesh", default="",
                     help="serving mesh 'DxM' (data x model) or 'auto'; "
                          "empty = single-device engine")
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable serving telemetry and print phase "
+                         "timings + Prometheus metrics after the run")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace JSON of the run "
+                         "(load in https://ui.perfetto.dev)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -162,8 +177,12 @@ def main():
     lens = [max(4, args.prompt_len - (i % 4) * (args.prompt_len // 8))
             for i in range(args.requests)]
 
+    telemetry = None
+    if args.metrics or args.trace_out:
+        from repro.obs import Telemetry
+        telemetry = Telemetry(enabled=True)
     engine = build_engine(cfg, model, params, args, draft_model,
-                          draft_params)
+                          draft_params, telemetry=telemetry)
     if engine.mesh is not None:
         print(f"serving mesh: "
               f"{dict(zip(engine.mesh.axis_names, engine.mesh.devices.shape))}"
@@ -198,6 +217,32 @@ def main():
               f"({stats['spec_accepted']:.0f}/{stats['spec_proposed']:.0f})")
     first = out[min(out)]
     print("sample token ids:", first.tokens[:16])
+
+    if args.metrics:
+        from repro.obs import prometheus_text
+        reg = telemetry.registry
+        print("\n-- step phases (per-step wall, us) --")
+        for name in ("step", "plan", "prefill_dispatch", "decode_dispatch",
+                     "sync", "fold"):
+            h = reg.histograms.get("phase/" + name)
+            if h is None:
+                continue
+            s = h.summary()
+            print(f"{name:18s} p50 {s['p50'] * 1e6:9.1f}  "
+                  f"p99 {s['p99'] * 1e6:9.1f}  "
+                  f"mean {s['mean'] * 1e6:9.1f}  n={s['count']}")
+        lat = [(out[r].queue_wait_s, out[r].preempt_stall_s, out[r].tpot_s)
+               for r in out]
+        print(f"mean queue wait {np.mean([x[0] for x in lat]) * 1e3:.2f}ms | "
+              f"mean preempt stall {np.mean([x[1] for x in lat]) * 1e3:.2f}ms"
+              f" | mean tpot {np.mean([x[2] for x in lat]) * 1e3:.2f}ms")
+        print("\n-- prometheus --")
+        print(prometheus_text(reg))
+    if args.trace_out:
+        from repro.obs import write_chrome
+        write_chrome(telemetry.trace, args.trace_out)
+        print(f"chrome trace -> {args.trace_out} "
+              f"(load in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,59 @@
+"""Metric exporters: Prometheus text exposition format + JSON snapshot.
+
+``prometheus_text`` renders a MetricsRegistry in the text format a
+Prometheus scrape endpoint would serve — counters and gauges as single
+samples, histograms as cumulative ``_bucket{le=...}`` series plus
+``_sum``/``_count`` — so the registry can back a real ``/metrics``
+endpoint later without re-plumbing.  ``json_snapshot`` is the same data
+as one nested dict (written by ``launch/serve.py --metrics`` and the
+latency benchmark).
+"""
+from __future__ import annotations
+
+import json
+import re
+
+from repro.obs.metrics import MetricsRegistry
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _sanitize(name: str, prefix: str = "repro_") -> str:
+    return prefix + _NAME_RE.sub("_", name)
+
+
+def _fmt(v: float) -> str:
+    if v == float("inf"):
+        return "+Inf"
+    return repr(int(v)) if float(v).is_integer() else repr(float(v))
+
+
+def prometheus_text(reg: MetricsRegistry) -> str:
+    lines: list[str] = []
+    for name in sorted(reg.counters):
+        n = _sanitize(name) + "_total"
+        lines += [f"# TYPE {n} counter", f"{n} {reg.counters[name].value}"]
+    for name in sorted(reg.gauges):
+        n = _sanitize(name)
+        lines += [f"# TYPE {n} gauge", f"{n} {_fmt(reg.gauges[name].value)}"]
+    for name in sorted(reg.histograms):
+        h = reg.histograms[name]
+        n = _sanitize(name)
+        lines.append(f"# TYPE {n} histogram")
+        cum = 0
+        for ub, c in zip(h.buckets, h.counts):
+            cum += c
+            lines.append(f'{n}_bucket{{le="{_fmt(ub)}"}} {cum}')
+        lines.append(f'{n}_bucket{{le="+Inf"}} {h.count}')
+        lines.append(f"{n}_sum {_fmt(h.total)}")
+        lines.append(f"{n}_count {h.count}")
+    return "\n".join(lines) + "\n"
+
+
+def json_snapshot(reg: MetricsRegistry) -> dict:
+    return reg.snapshot()
+
+
+def write_snapshot(reg: MetricsRegistry, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(json_snapshot(reg), f, indent=1)

@@ -55,6 +55,18 @@ token, acceptance count and prefill logit the host needs is fetched in a
 single ``jax.device_get`` (``stats["host_syncs"]``; asserted in
 tests/test_serve_spec.py).
 
+Observability (``Engine(..., telemetry=...)``; DESIGN.md §12): a
+``repro.obs.Telemetry`` handle records per-step phase timers (plan /
+prefill dispatch / decode-or-spec dispatch / the one device_get sync /
+host fold), per-request lifecycle spans (submit → admit → first chunk →
+first token → preempt/resume → finish) and per-step pool gauges.  All
+instrumentation is host-side wall clock around the existing calls —
+never inside jitted code, never touching the RNG — so metrics-on and
+metrics-off engine outputs are byte-identical (tests/test_obs.py), and
+the disabled default costs one attribute check per hook.  The engine's
+run counters are registry-backed; ``run()`` stats are a diff of two
+registry snapshots.
+
 Sharded serving (``Engine(..., mesh=...)``; DESIGN.md §10): the same
 engine runs over a (data, model) device mesh — request slots
 data-parallel, paged pools tensor-parallel over kv_heads, all host
@@ -83,8 +95,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import tree_shardings, use_rules
 from repro.kernels.paged_attention import CACHE_DTYPES, is_quantized
+from repro.obs import NULL_CTX, Telemetry
 from repro.serve.kv_cache import PagedCache
 from repro.serve.scheduler import FCFSScheduler, Request, RequestState
+
+# engine run counters, registry-backed (repro.obs): the keys double as
+# the delta-stat names Engine.run() reports, so stats stay a pure diff
+# of two registry snapshots instead of hand-rolled `x0` locals
+_RUN_COUNTERS = ("steps", "decode_tokens", "prefill_tokens",
+                 "prefill_chunks", "cow_copies", "host_syncs",
+                 "spec_cycles", "spec_proposed", "spec_accepted")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,13 +148,19 @@ class FinishedRequest:
     preemptions: int
     steps: int                        # engine steps, first admission -> finish
     ttft_s: float = 0.0               # submission -> first sampled token
+    queue_wait_s: float = 0.0         # submission -> first admission
+    preempt_stall_s: float = 0.0      # total wall spent evicted, preempt
+                                      # -> re-admission, summed over evictions
+    tpot_s: float = 0.0               # mean per-token latency after the
+                                      # first token (0 for 1-token requests)
     spec_proposed: int = 0            # draft tokens offered to verification
     spec_accepted: int = 0            # draft tokens the target accepted
 
 
 class Engine:
     def __init__(self, model, params, cfg: ServeConfig | None = None,
-                 draft_model=None, draft_params=None, mesh=None):
+                 draft_model=None, draft_params=None, mesh=None,
+                 telemetry: Telemetry | None = None):
         if not model.cfg.has_decode:
             raise ValueError(f"{model.cfg.name} has no decode path")
         if model.cfg.family == "vlm":
@@ -142,6 +168,15 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg or ServeConfig()
+        # --- observability (repro.obs; DESIGN.md §12) ---------------------
+        # Host-side only: phase timers, lifecycle spans and pool gauges
+        # never touch the jitted paths, the device arrays, or the RNG, so
+        # enabling telemetry cannot change engine outputs (tests/test_obs).
+        # The default disabled handle is a no-op (one attr check per hook);
+        # the registry's run counters are always live — they replaced
+        # equally-cheap attribute increments and back run()'s stats.
+        self.obs = telemetry if telemetry is not None else \
+            Telemetry(enabled=False)
         # --- mesh-aware serving (DESIGN.md §10) ---------------------------
         # With a (data, model) mesh the engine becomes one sharded SPMD
         # program: block pools + head-sharded params go tensor-parallel
@@ -377,19 +412,35 @@ class Engine:
         self.scheduler = FCFSScheduler(self.cache_host)
         self._key = jax.random.PRNGKey(self.cfg.seed)
         self._rid = 0
-        self._steps = 0
-        self._decode_tokens = 0
-        self._prefill_tokens = 0
-        self._prefill_chunks = 0
-        self._cow_copies = 0
-        self._host_syncs = 0
-        self._spec_cycles = 0
-        self._spec_proposed = 0
-        self._spec_accepted = 0
+        self._c = {k: self.obs.registry.counter("serve/" + k)
+                   for k in _RUN_COUNTERS}
+        for c in self._c.values():
+            c.reset()
         self._admit_step: dict[int, int] = {}
         self._finish_step: dict[int, int] = {}
+        # per-request wall clocks (request-lifecycle spans + the latency
+        # fields on FinishedRequest; all host-side)
         self._submit_wall: dict[int, float] = {}
         self._first_tok_wall: dict[int, float] = {}
+        self._last_tok_wall: dict[int, float] = {}
+        self._queue_wait: dict[int, float] = {}
+        self._preempt_wall: dict[int, float] = {}
+        self._preempt_stall: dict[int, float] = {}
+        self._chunked: set[int] = set()   # rids whose first chunk is logged
+
+    # back-compat accessors: these were plain attributes before the
+    # registry existed and are still read by tests/benchmarks
+    @property
+    def _steps(self) -> int:
+        return self._c["steps"].value
+
+    @property
+    def _cow_copies(self) -> int:
+        return self._c["cow_copies"].value
+
+    @property
+    def _host_syncs(self) -> int:
+        return self._c["host_syncs"].value
 
     # ----- jitted steps -----
     def _sample(self, logits, temps, key):
@@ -541,6 +592,7 @@ class Engine:
         rid = self._rid
         self._rid += 1
         self._submit_wall[rid] = time.time()
+        self.obs.event("submit", rid)
         self.scheduler.add(Request(
             rid=rid, prompt=tuple(int(t) for t in prompt),
             max_new_tokens=max_new_tokens, temperature=temperature,
@@ -548,33 +600,88 @@ class Engine:
         return rid
 
     def _append_sample(self, s: RequestState, tok: int) -> None:
-        self._decode_tokens += 1
+        self._c["decode_tokens"].inc()
+        rid = s.req.rid
+        now = time.time()
         if not s.generated:
-            self._first_tok_wall[s.req.rid] = time.time()
+            self._first_tok_wall[rid] = now
+            self.obs.event("first_token", rid)
+        self._last_tok_wall[rid] = now
         s.generated.append(tok)
         if tok in s.req.stop_tokens:
             s.stopped = True
         if s.done:
-            self._finish_step[s.req.rid] = self._steps + 1
+            self._finish_step[rid] = self._steps + 1
+            self.obs.event("finish", rid)
 
     def _fetch(self, tree):
         """The step's single device->host synchronization point: one
         batched transfer of every value the host needs this step."""
-        self._host_syncs += 1
+        self._c["host_syncs"].inc()
         return jax.device_get(tree)
+
+    def _phase(self, name: str):
+        """Step-phase timer (no-op context when telemetry is disabled)."""
+        if not self.obs.enabled:
+            return NULL_CTX
+        return self.obs.phase(name, self._steps)
+
+    def _note_transitions(self, plan) -> None:
+        """Queue-transition bookkeeping for this scheduling round:
+        lifecycle span events plus the queue-wait / preemption-stall
+        wall clocks surfaced on FinishedRequest.  Host wall time only —
+        cheap enough to run unconditionally (one time.time() when any
+        transition happened)."""
+        if not (plan.admitted or plan.preempted):
+            return
+        now = time.time()
+        for s in plan.preempted:
+            self._preempt_wall[s.req.rid] = now
+            self.obs.event("preempt", s.req.rid)
+        for s in plan.admitted:
+            rid = s.req.rid
+            t0 = self._preempt_wall.pop(rid, None)
+            if t0 is not None:                # back from eviction
+                self._preempt_stall[rid] = \
+                    self._preempt_stall.get(rid, 0.0) + (now - t0)
+                self.obs.event("resume", rid)
+            else:
+                self._queue_wait.setdefault(
+                    rid, now - self._submit_wall.get(rid, now))
+                self.obs.event("admit", rid)
+
+    def _sample_gauges(self) -> None:
+        """Per-step pool occupancy + prefix-index gauges (telemetry only;
+        recorded both as registry gauges and trace counter samples)."""
+        a = self.cache_host.allocator
+        self.obs.sample("pool", {
+            "free": a.num_free, "live": a.num_live, "cached": a.num_cached,
+            "evictions": a.total_evictions,
+            "cow_copies": self._cow_copies})
+        c = self.cache_host
+        if c.prefix_caching:
+            self.obs.sample("prefix", {
+                "lookups": c.prefix_lookups, "hits": c.prefix_hits,
+                "hit_rate": c.prefix_hits / max(c.prefix_lookups, 1)})
 
     def step(self) -> list[RequestState]:
         """One engine step: schedule, run prefill chunks + the decode (or
         draft/verify) batch, fetch the results in one transfer, fold
         them back."""
         with self._trace_ctx():
-            return self._step_host()
+            with self._phase("step"):
+                out = self._step_host()
+            if self.obs.enabled:
+                self._sample_gauges()
+            return out
 
     def _step_host(self) -> list[RequestState]:
         spec_k = self.cfg.spec_k if self.spec_active else 0
-        plan = self.scheduler.plan_step(self.cfg.chunk_size,
-                                        self.cfg.prefill_budget, spec_k,
-                                        self.cfg.spec_ema)
+        with self._phase("plan"):
+            plan = self.scheduler.plan_step(self.cfg.chunk_size,
+                                            self.cfg.prefill_budget, spec_k,
+                                            self.cfg.spec_ema)
+        self._note_transitions(plan)
         running = plan.decode + [s for s, _ in plan.prefill]
         for s in running:
             self._admit_step.setdefault(s.req.rid, self._steps)
@@ -587,100 +694,114 @@ class Engine:
             if spec_k:
                 self.draft_cache = self._cow_fn(
                     self.draft_cache, np.int32(src), np.int32(dst))
-            self._cow_copies += 1
+            self._c["cow_copies"].inc()
 
         fetch: dict[str, Any] = {}            # one device_get at the end
         sampled_prefills: list[RequestState] = []
 
-        C = self.cfg.chunk_size
         if plan.prefill:
-            # every planned chunk rides ONE fixed-shape (max_seqs, C) call
-            # — one launch per step instead of a per-slot python loop, and
-            # under sharded-DP each data shard prefills its own slots
-            # concurrently.  Rows with valid == 0 are idle: K/V writes land
-            # in the null block, recurrent state is write-gated.
-            B = self.cfg.max_seqs
-            toks = np.zeros((B, C), np.int32)
-            pos = np.zeros((B, C), np.int32)
-            valid = np.zeros((B,), np.int32)
-            ptemps = np.zeros((B,), np.float32)
-            pref_active = np.zeros((B,), bool)
-            for s, n in plan.prefill:
-                seq = s.seq
-                toks[s.slot, :n] = seq[s.num_cached:s.num_cached + n]
-                pos[s.slot] = s.num_cached + np.arange(C, dtype=np.int32)
-                valid[s.slot] = n
-                ptemps[s.slot] = s.req.temperature
-                pref_active[s.slot] = True
-            ptables = np.where(pref_active[:, None],
-                               self.cache_host.tables, 0)
-            args = (jnp.asarray(toks), jnp.asarray(pos),
-                    jnp.asarray(np.arange(B, dtype=np.int32)),
-                    jnp.asarray(ptables), jnp.asarray(valid))
-            self._key, sub = jax.random.split(self._key)
-            nxt, self.cache = self._prefill_fn(
-                self.params, self.cache, *args, jnp.asarray(ptemps), sub)
-            if spec_k:                        # keep the draft pool in step
-                self.draft_cache = self._draft_prefill_fn(
-                    self.draft_params, self.draft_cache, *args)
-            for s, n in plan.prefill:
-                if spec_k:
-                    s.draft_cached = s.num_cached + n
-                covered_last = s.num_cached + n == s.seq_len
-                s.num_cached += n
-                self._prefill_chunks += 1
-                self._prefill_tokens += n - (1 if covered_last else 0)
-                if covered_last:              # chunk saw the last known token
-                    sampled_prefills.append(s)
-            if sampled_prefills:
-                fetch["pre"] = nxt
+            with self._phase("prefill_dispatch"):
+                self._dispatch_prefill(plan, spec_k, fetch, sampled_prefills)
 
         spec_meta: list[tuple[RequestState, int, int]] = []
         if plan.decode:
-            B = self.cfg.max_seqs
-            tokens = np.zeros((B,), np.int32)
-            positions = np.zeros((B,), np.int32)
-            temps = np.zeros((B,), np.float32)
-            active = np.zeros((B,), bool)
-            for s in plan.decode:
-                tokens[s.slot] = s.next_token
-                positions[s.slot] = s.num_cached
-                temps[s.slot] = s.req.temperature
-                active[s.slot] = True
-            # inactive slots write into the null block, not their tables
-            tables = np.where(active[:, None], self.cache_host.tables, 0)
+            with self._phase("decode_dispatch"):   # plain, or draft+verify
+                self._dispatch_decode(plan, spec_k, fetch, spec_meta)
 
-            if spec_k and plan.spec:
-                fetch["out"], fetch["acc"] = self._spec_decode(
-                    plan, tokens, positions, temps, active, tables,
-                    spec_meta)
-            else:
-                self._key, sub = jax.random.split(self._key)
-                nxt, self.cache = self._step_fn(
-                    self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(positions), jnp.asarray(tables),
-                    jnp.asarray(temps), jnp.asarray(active), sub)
-                fetch["dec"] = nxt
+        with self._phase("sync"):             # the ONE device_get per step
+            vals = self._fetch(fetch) if fetch else {}
 
-        vals = self._fetch(fetch) if fetch else {}
+        with self._phase("fold"):
+            for s in sampled_prefills:
+                self._append_sample(s, int(vals["pre"][s.slot]))
 
-        for s in sampled_prefills:
-            self._append_sample(s, int(vals["pre"][s.slot]))
+            if "dec" in vals:
+                for s in plan.decode:
+                    was_last_known = s.num_cached == s.seq_len - 1
+                    s.num_cached += 1
+                    if not was_last_known:    # still streaming known tokens
+                        self._c["prefill_tokens"].inc()
+                        continue
+                    self._append_sample(s, int(vals["dec"][s.slot]))
+            elif "out" in vals:
+                self._fold_spec(plan, vals["out"], vals["acc"], spec_meta)
 
-        if "dec" in vals:
-            for s in plan.decode:
-                was_last_known = s.num_cached == s.seq_len - 1
-                s.num_cached += 1
-                if not was_last_known:        # still streaming known tokens
-                    self._prefill_tokens += 1
-                    continue
-                self._append_sample(s, int(vals["dec"][s.slot]))
-        elif "out" in vals:
-            self._fold_spec(plan, vals["out"], vals["acc"], spec_meta)
-
-        self._steps += 1
-        self.scheduler.commit_progress()      # register newly-full blocks
+            self._c["steps"].inc()
+            self.scheduler.commit_progress()  # register newly-full blocks
         return running
+
+    def _dispatch_decode(self, plan, spec_k, fetch, spec_meta):
+        """Build the fixed-shape decode batch and launch either the plain
+        decode step or the speculative draft/verify cycle."""
+        B = self.cfg.max_seqs
+        tokens = np.zeros((B,), np.int32)
+        positions = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        active = np.zeros((B,), bool)
+        for s in plan.decode:
+            tokens[s.slot] = s.next_token
+            positions[s.slot] = s.num_cached
+            temps[s.slot] = s.req.temperature
+            active[s.slot] = True
+        # inactive slots write into the null block, not their tables
+        tables = np.where(active[:, None], self.cache_host.tables, 0)
+
+        if spec_k and plan.spec:
+            fetch["out"], fetch["acc"] = self._spec_decode(
+                plan, tokens, positions, temps, active, tables,
+                spec_meta)
+        else:
+            self._key, sub = jax.random.split(self._key)
+            nxt, self.cache = self._step_fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(positions), jnp.asarray(tables),
+                jnp.asarray(temps), jnp.asarray(active), sub)
+            fetch["dec"] = nxt
+
+    def _dispatch_prefill(self, plan, spec_k, fetch, sampled_prefills):
+        """Every planned chunk rides ONE fixed-shape (max_seqs, C) call —
+        one launch per step instead of a per-slot python loop, and under
+        sharded-DP each data shard prefills its own slots concurrently.
+        Rows with valid == 0 are idle: K/V writes land in the null block,
+        recurrent state is write-gated."""
+        B, C = self.cfg.max_seqs, self.cfg.chunk_size
+        toks = np.zeros((B, C), np.int32)
+        pos = np.zeros((B, C), np.int32)
+        valid = np.zeros((B,), np.int32)
+        ptemps = np.zeros((B,), np.float32)
+        pref_active = np.zeros((B,), bool)
+        for s, n in plan.prefill:
+            seq = s.seq
+            toks[s.slot, :n] = seq[s.num_cached:s.num_cached + n]
+            pos[s.slot] = s.num_cached + np.arange(C, dtype=np.int32)
+            valid[s.slot] = n
+            ptemps[s.slot] = s.req.temperature
+            pref_active[s.slot] = True
+        ptables = np.where(pref_active[:, None],
+                           self.cache_host.tables, 0)
+        args = (jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(np.arange(B, dtype=np.int32)),
+                jnp.asarray(ptables), jnp.asarray(valid))
+        self._key, sub = jax.random.split(self._key)
+        nxt, self.cache = self._prefill_fn(
+            self.params, self.cache, *args, jnp.asarray(ptemps), sub)
+        if spec_k:                        # keep the draft pool in step
+            self.draft_cache = self._draft_prefill_fn(
+                self.draft_params, self.draft_cache, *args)
+        for s, n in plan.prefill:
+            if self.obs.enabled and s.req.rid not in self._chunked:
+                self._chunked.add(s.req.rid)
+                self.obs.event("first_chunk", s.req.rid)
+            if spec_k:
+                s.draft_cached = s.num_cached + n
+            covered_last = s.num_cached + n == s.seq_len
+            s.num_cached += n
+            self._c["prefill_chunks"].inc()
+            self._c["prefill_tokens"].inc(n - (1 if covered_last else 0))
+            if covered_last:              # chunk saw the last known token
+                sampled_prefills.append(s)
+        if sampled_prefills:
+            fetch["pre"] = nxt
 
     def _spec_decode(self, plan, tokens, positions, temps, active, tables,
                      spec_meta):
@@ -724,7 +845,7 @@ class Engine:
                 np.arange(B, dtype=np.int32)),
             jnp.asarray(tables), jnp.asarray(valid), jnp.asarray(ncand),
             jnp.asarray(temps), k_verify)
-        self._spec_cycles += 1
+        self._c["spec_cycles"].inc()
         return out, n_acc
 
     def _fold_spec(self, plan, out, n_acc, spec_meta):
@@ -739,7 +860,7 @@ class Engine:
             was_decode = s.num_cached == s.seq_len - 1
             if not was_decode:                # legacy token-by-token prefill
                 s.num_cached += 1
-                self._prefill_tokens += 1
+                self._c["prefill_tokens"].inc()
                 continue
             draft_start = s.draft_cached
             # the a accepted drafts, plus the rejection replacement (or
@@ -755,8 +876,18 @@ class Engine:
                 s.draft_cached = min(draft_start + k, s.num_cached)
                 s.spec_proposed += n_cand
                 s.spec_accepted += a
-                self._spec_proposed += n_cand
-                self._spec_accepted += a
+                self._c["spec_proposed"].inc(n_cand)
+                self._c["spec_accepted"].inc(a)
+                if n_cand:
+                    # acceptance histograms (telemetry only): accepted
+                    # drafts per cycle in [0, K], and the cycle's rate
+                    self.obs.observe(
+                        "spec/accepted_per_cycle", a,
+                        buckets=tuple(float(i)
+                                      for i in range(self.cfg.spec_k + 1)))
+                    self.obs.observe(
+                        "spec/acceptance_rate", a / n_cand,
+                        buckets=tuple(i / 10 for i in range(11)))
                 if self.cfg.spec_ema > 0 and n_cand:
                     # dynamic K: fold this cycle's acceptance rate into
                     # the slot's EMA; the next plan_step clamps its K to
@@ -767,58 +898,71 @@ class Engine:
                 # surplus blocks; the commit cursor rewinds with them
                 self.cache_host.truncate(s.slot, s.num_cached)
 
+    def _record(self, s: RequestState) -> FinishedRequest:
+        """One finished request's result + latency record, built from the
+        per-rid wall clocks — valid whether the tokens came from manual
+        ``step()`` driving or a ``run()`` drain (no fallback to run()'s
+        start time, which used to zero the TTFT of requests whose first
+        token predated the run() call)."""
+        rid = s.req.rid
+        sub = self._submit_wall.get(rid)
+        ft = self._first_tok_wall.get(rid)
+        lt = self._last_tok_wall.get(rid)
+        n = len(s.generated)
+        return FinishedRequest(
+            rid=rid, prompt=s.req.prompt, tokens=list(s.generated),
+            preemptions=s.preemptions,
+            steps=(self._finish_step.get(rid, self._steps)
+                   - self._admit_step.get(rid, 0)),
+            ttft_s=(max(ft - sub, 0.0)
+                    if sub is not None and ft is not None else 0.0),
+            queue_wait_s=self._queue_wait.get(rid, 0.0),
+            preempt_stall_s=self._preempt_stall.get(rid, 0.0),
+            tpot_s=(max(lt - ft, 0.0) / (n - 1)
+                    if n > 1 and ft is not None and lt is not None else 0.0),
+            spec_proposed=s.spec_proposed,
+            spec_accepted=s.spec_accepted)
+
+    def finished(self) -> dict[int, FinishedRequest]:
+        """Records for every request finished so far (manual ``step()``
+        driving included — open-loop benchmarks use this after draining
+        the queue themselves)."""
+        return {s.req.rid: self._record(s) for s in self.scheduler.finished}
+
     def run(self, requests: Iterable[dict[str, Any]] | None = None
             ) -> tuple[dict[int, FinishedRequest], dict[str, float]]:
         """Drive until the queue drains.  Returns ({rid: result}, stats)."""
         if requests:
             for r in requests:
                 self.add_request(**r)
-        # snapshot so repeated run() calls report THIS drain only
-        steps0, dec0, pre0 = self._steps, self._decode_tokens, \
-            self._prefill_tokens
-        prop0, acc0 = self._spec_proposed, self._spec_accepted
-        cyc0, sync0 = self._spec_cycles, self._host_syncs
-        chunk0, cow0 = self._prefill_chunks, self._cow_copies
+        # registry snapshot so repeated run() calls report THIS drain only
+        c0 = self.obs.registry.counter_values("serve/")
         fin0 = len(self.scheduler.finished)
         t0 = time.time()
         while self.scheduler.has_work:
             self.step()
         dt = time.time() - t0
 
-        out = {}
-        ttfts = []
-        for s in self.scheduler.finished[fin0:]:
-            rid = s.req.rid
-            # submission -> first sampled token, valid whether the tokens
-            # came from manual step() calls or this run()'s drain
-            ttft = max(self._first_tok_wall.get(rid, t0)
-                       - self._submit_wall.get(rid, t0), 0.0)
-            ttfts.append(ttft)
-            out[rid] = FinishedRequest(
-                rid=rid, prompt=s.req.prompt, tokens=list(s.generated),
-                preemptions=s.preemptions,
-                steps=(self._finish_step.get(rid, self._steps)
-                       - self._admit_step.get(rid, 0)),
-                ttft_s=ttft,
-                spec_proposed=s.spec_proposed,
-                spec_accepted=s.spec_accepted)
-        dec = self._decode_tokens - dec0
-        pre = self._prefill_tokens - pre0
-        prop = self._spec_proposed - prop0
-        acc = self._spec_accepted - acc0
+        out = {s.req.rid: self._record(s)
+               for s in self.scheduler.finished[fin0:]}
+        d = {k: float(c.value - c0["serve/" + k])
+             for k, c in self._c.items()}
+        dec, pre = d["decode_tokens"], d["prefill_tokens"]
+        prop, acc = d["spec_proposed"], d["spec_accepted"]
+        ttfts = [r.ttft_s for r in out.values()]
         stats = {
             "wall_s": dt,
-            "steps": float(self._steps - steps0),
-            "decode_tokens": float(dec),
-            "prefill_tokens": float(pre),
+            "steps": d["steps"],
+            "decode_tokens": dec,
+            "prefill_tokens": pre,
             "decode_tok_per_s": dec / max(dt, 1e-9),
             "total_tok_per_s": (dec + pre) / max(dt, 1e-9),
-            "prefill_chunks": float(self._prefill_chunks - chunk0),
-            "cow_copies": float(self._cow_copies - cow0),
-            "host_syncs": float(self._host_syncs - sync0),
-            "spec_cycles": float(self._spec_cycles - cyc0),
-            "spec_proposed": float(prop),
-            "spec_accepted": float(acc),
+            "prefill_chunks": d["prefill_chunks"],
+            "cow_copies": d["cow_copies"],
+            "host_syncs": d["host_syncs"],
+            "spec_cycles": d["spec_cycles"],
+            "spec_proposed": prop,
+            "spec_accepted": acc,
             "spec_acceptance": acc / prop if prop else 0.0,
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
         }

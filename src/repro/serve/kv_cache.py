@@ -81,8 +81,10 @@ class BlockAllocator:
         self._free = list(range(num_blocks - 1, 0, -1))
         self._ref: dict[int, int] = {}
         self._cached: "OrderedDict[int, None]" = OrderedDict()
-        # stats (benchmarks/serving.py): fresh allocations vs prefix reuse
+        # stats (benchmarks/serving.py, repro.obs pool gauges): fresh
+        # allocations vs prefix reuse, and LRU evictions of cached blocks
         self.total_allocated = 0
+        self.total_evictions = 0
         self.peak_live = 0
 
     @property
@@ -116,6 +118,7 @@ class BlockAllocator:
             if self.on_evict is not None:
                 self.on_evict(b)
             self._free.append(b)
+            self.total_evictions += 1
         out = [self._free.pop() for _ in range(n)]
         for b in out:
             self._ref[b] = 1
@@ -210,6 +213,10 @@ class PagedCache:
         # far (a list, not just the tip, so speculative rollback can rewind
         # the commit cursor block by block)
         self._chain: list[list[int]] = [[] for _ in range(self.max_seqs)]
+        # prefix-index effectiveness (repro.obs pool gauges): full-block
+        # index probes at admission vs probes that aliased a block
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
 
     def shard_of(self, slot: int) -> int:
         return slot // (self.max_seqs // self.data_shards)
@@ -289,6 +296,7 @@ class PagedCache:
         while (len(matched) + 1) * bs <= len(tokens):
             i = len(matched)
             h2 = _chain_hash(h, tuple(tokens[i * bs:(i + 1) * bs]))
+            self.prefix_lookups += 1
             b = self._block_of.get(h2)
             if b is None:
                 break
@@ -299,6 +307,7 @@ class PagedCache:
                 # that shard's (garbage) replica
                 break
             self.allocator.incref(b)
+            self.prefix_hits += 1
             matched.append(b)
             hashes.append(h2)
             h = h2

@@ -103,11 +103,16 @@ class StepPlan:
     chunks (state, n_tokens), device pool copies (COW) to run first, and
     the decode subset taking a K-token speculative draft/verify cycle
     this step (``spec`` is always a subset of ``decode``; pool room for
-    the K+1 speculative positions is pre-reserved)."""
+    the K+1 speculative positions is pre-reserved).  ``admitted`` and
+    ``preempted`` report this round's queue transitions so the engine
+    can record request-lifecycle spans and queue-wait / preemption-stall
+    wall time (repro.obs; DESIGN.md §12) without re-deriving them."""
     decode: list[RequestState]
     prefill: list[tuple[RequestState, int]]
     copies: list[tuple[int, int]]
     spec: list[RequestState] = dataclasses.field(default_factory=list)
+    admitted: list[RequestState] = dataclasses.field(default_factory=list)
+    preempted: list[RequestState] = dataclasses.field(default_factory=list)
 
 
 class FCFSScheduler:
@@ -261,12 +266,13 @@ class FCFSScheduler:
         The device shapes stay (B, spec_k) — dynamic K narrows ``ncand``
         and the pool reservation, never the compiled step."""
         self.retire_finished()
-        self.grow_or_preempt()
-        self.admit()
+        preempted = self.grow_or_preempt()
+        admitted = self.admit()
         copies, self._copies = self._copies, []
         if chunk_size <= 1 and spec_k <= 0:
             return StepPlan(decode=list(self.running), prefill=[],
-                            copies=copies)
+                            copies=copies, admitted=admitted,
+                            preempted=preempted)
         # with chunking off, prefill-phase slots still advance through the
         # decode path token by token (the legacy contract)
         decode = list(self.running) if chunk_size <= 1 else \
@@ -307,7 +313,7 @@ class FCFSScheduler:
                 spec.append(s)
                 budget -= k_s
         return StepPlan(decode=decode, prefill=prefill, copies=copies,
-                        spec=spec)
+                        spec=spec, admitted=admitted, preempted=preempted)
 
     def commit_progress(self) -> None:
         """Register newly-filled full blocks in the prefix index (no-op
