@@ -570,17 +570,79 @@ def _percentiles(xs) -> dict[str, float]:
             "mean": float(a.mean())}
 
 
+def _sibling(path: str, tag: str) -> str:
+    root, ext = os.path.splitext(path)
+    return f"{root}{tag}{ext}"
+
+
+def _drive_open_loop(eng, tel, prompts, arrivals, use_async: bool) -> dict:
+    """Replay one precomputed Poisson arrival schedule against a fresh
+    engine run, driving ``step_async`` or ``step``.  The async drain
+    condition includes ``pending_step`` — the last dispatched step still
+    owes its reconcile after the queue empties."""
+    eng.obs = tel
+    eng.reset()
+    step = eng.step_async if use_async else eng.step
+    n = len(prompts)
+    t0 = time.perf_counter()
+    nxt = 0
+    while nxt < n or eng.scheduler.has_work or eng.pending_step:
+        now = time.perf_counter() - t0
+        while nxt < n and arrivals[nxt] <= now:
+            eng.add_request(prompts[nxt], max_new_tokens=LAT_GEN)
+            nxt += 1
+        if eng.scheduler.has_work or eng.pending_step:
+            step()
+        elif nxt < n:                           # idle until the next arrival
+            time.sleep(min(arrivals[nxt] - now, 0.01))
+    makespan = time.perf_counter() - t0
+
+    recs = eng.finished()
+    assert len(recs) == n
+    hists = tel.registry.histograms
+    phases = {k.split("/", 1)[1]: h.summary()
+              for k, h in hists.items() if k.startswith("phase/")}
+    step_h, sync_h = hists.get("phase/step"), hists.get("phase/sync")
+    return {
+        "makespan_s": makespan,
+        "ttft_s": _percentiles([r.ttft_s for r in recs.values()]),
+        "tpot_s": _percentiles([r.tpot_s for r in recs.values()
+                                if len(r.tokens) > 1]),
+        "queue_wait_s": _percentiles([r.queue_wait_s
+                                      for r in recs.values()]),
+        "tokens": sum(len(r.tokens) for r in recs.values()),
+        "bubble_fraction": (sync_h.total / step_h.total
+                            if step_h is not None and step_h.total > 0
+                            and sync_h is not None else 0.0),
+        "overlapped_steps": (hists["phase/overlap"].count
+                             if "phase/overlap" in hists else 0),
+        "phases_s": phases,
+        "counters": tel.registry.counter_values(),
+    }
+
+
 def latency_rows(rate: float, out_path: str | None = None,
                  trace_path: str | None = None) -> list[str]:
-    """Open-loop Poisson load (DESIGN.md §12): arrival times are drawn
-    up-front from exponential inter-arrivals at ``rate`` req/s and the
-    drive loop submits each request when the wall clock passes its
-    arrival — the engine cannot backpressure the arrival process, so
-    queueing delay shows up in TTFT exactly as it would for real
-    traffic.  Tail latency comes from the engine's own lifecycle
-    telemetry (``FinishedRequest.ttft_s/tpot_s/queue_wait_s``), which is
-    wall-clock-correct under manual ``step()`` driving; the same run's
-    phase timers and pool gauges are exported as a Chrome trace."""
+    """Open-loop Poisson load (DESIGN.md §12), sync-vs-async A/B: arrival
+    times are drawn up-front from exponential inter-arrivals at ``rate``
+    req/s and the drive loop submits each request when the wall clock
+    passes its arrival — the engine cannot backpressure the arrival
+    process, so queueing delay shows up in TTFT exactly as it would for
+    real traffic.  The same schedule then replays twice on one engine:
+    lockstep ``step()`` and double-buffered ``step_async()`` (DESIGN.md
+    §13), so the host bubble fraction (phase sync / phase step wall) and
+    TPOT move is a controlled before/after.  The engine is built with
+    ``donate_pools="never"`` so both modes run the *identical* compiled
+    program — XLA:CPU executes donated calls synchronously at dispatch,
+    which would hide the sync mode's device wait inside the dispatch
+    phase and misattribute the bubble.  Caveat: the pipeline needs host
+    and device work to run on separate execution resources; on a
+    single-core host (``cpu_count`` is recorded in the JSON) the two
+    time-share and async mode can only break even.  Tail latency comes
+    from the engine's own lifecycle telemetry
+    (``FinishedRequest.ttft_s/tpot_s/queue_wait_s``), which is
+    wall-clock-correct under manual driving; each mode's phase timers
+    and pool gauges are exported as a Chrome trace."""
     from repro.obs import Telemetry, write_chrome
 
     cfg = bench_cfg()
@@ -593,70 +655,75 @@ def latency_rows(rate: float, out_path: str | None = None,
 
     eng = Engine(model, params, ServeConfig(
         max_seqs=8, block_size=16, max_len=LAT_PROMPT + LAT_GEN,
-        chunk_size=16))
-    for p in prompts[:4]:                       # compile outside the run
-        eng.add_request(p, max_new_tokens=LAT_GEN)
-    eng.run()
+        chunk_size=16, donate_pools="never"))
+    for mode_async in (False, True):            # compile outside the run
+        eng.reset()                             # (async adds the splice ops)
+        for p in prompts[:4]:
+            eng.add_request(p, max_new_tokens=LAT_GEN)
+        step = eng.step_async if mode_async else eng.step
+        while eng.scheduler.has_work or eng.pending_step:
+            step()
 
-    # fresh telemetry AFTER compile: the trace and histograms cover only
-    # the measured run (reset() rebinds the run counters to the new
-    # registry)
-    tel = Telemetry(enabled=True)
-    eng.obs = tel
-    eng.reset()
-
+    # fresh telemetry per mode, AFTER compile: each mode's trace and
+    # histograms cover only its measured run (reset() rebinds the run
+    # counters to the new registry)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, LAT_NREQ))
-    t0 = time.perf_counter()
-    nxt = 0
-    while nxt < LAT_NREQ or eng.scheduler.has_work:
-        now = time.perf_counter() - t0
-        while nxt < LAT_NREQ and arrivals[nxt] <= now:
-            eng.add_request(prompts[nxt], max_new_tokens=LAT_GEN)
-            nxt += 1
-        if eng.scheduler.has_work:
-            eng.step()
-        elif nxt < LAT_NREQ:                    # idle until the next arrival
-            time.sleep(min(arrivals[nxt] - now, 0.01))
-    makespan = time.perf_counter() - t0
+    modes, traces = {}, {}
+    for name in ("sync", "async"):
+        tel = Telemetry(enabled=True)
+        modes[name] = _drive_open_loop(eng, tel, prompts, arrivals,
+                                       use_async=(name == "async"))
+        traces[name] = tel.trace
 
-    recs = eng.finished()
-    assert len(recs) == LAT_NREQ
-    ttft = _percentiles([r.ttft_s for r in recs.values()])
-    tpot = _percentiles([r.tpot_s for r in recs.values()
-                         if len(r.tokens) > 1])
-    qwait = _percentiles([r.queue_wait_s for r in recs.values()])
-    n_new = sum(len(r.tokens) for r in recs.values())
-
+    sy, an = modes["sync"], modes["async"]
+    ttft, tpot, qwait = sy["ttft_s"], sy["tpot_s"], sy["queue_wait_s"]
     rows = [
         f"serving_lat_ttft_p50,{ttft['p50'] * 1e6:.0f},"
         f"{ttft['p50'] * 1e3:.1f}ms TTFT p50 (open loop, "
-        f"{rate:g} req/s Poisson, {LAT_NREQ} reqs)",
+        f"{rate:g} req/s Poisson, {LAT_NREQ} reqs, sync)",
         f"serving_lat_ttft_p99,{ttft['p99'] * 1e6:.0f},"
         f"{ttft['p99'] * 1e3:.1f}ms TTFT p99 "
         f"(queue wait p99 {qwait['p99'] * 1e3:.1f}ms)",
         f"serving_lat_tpot_p50,{tpot['p50'] * 1e6:.0f},"
-        f"{tpot['p50'] * 1e3:.1f}ms/token p50 after first token",
+        f"{tpot['p50'] * 1e3:.1f}ms/token p50 after first token (sync)",
         f"serving_lat_tpot_p99,{tpot['p99'] * 1e6:.0f},"
         f"{tpot['p99'] * 1e3:.1f}ms/token p99 "
-        f"({n_new / makespan:.1f} tok/s over the {makespan:.1f}s run)",
+        f"({sy['tokens'] / sy['makespan_s']:.1f} tok/s over the "
+        f"{sy['makespan_s']:.1f}s run)",
+        f"serving_lat_async_tpot_p50,{an['tpot_s']['p50'] * 1e6:.0f},"
+        f"{an['tpot_s']['p50'] * 1e3:.1f}ms/token p50 async "
+        f"(vs {tpot['p50'] * 1e3:.1f}ms sync, "
+        f"{an['overlapped_steps']} overlapped steps)",
+        f"serving_lat_bubble_sync,{sy['bubble_fraction'] * 1e6:.0f},"
+        f"host bubble fraction {sy['bubble_fraction']:.3f} sync "
+        f"(phase sync / phase step wall)",
+        f"serving_lat_bubble_async,{an['bubble_fraction'] * 1e6:.0f},"
+        f"host bubble fraction {an['bubble_fraction']:.3f} async",
     ]
     if out_path:
         os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
-        phases = {k.split("/", 1)[1]: h.summary()
-                  for k, h in tel.registry.histograms.items()
-                  if k.startswith("phase/")}
+        common = {"arrival_rate": rate, "requests": LAT_NREQ,
+                  "gen": LAT_GEN, "cpu_count": os.cpu_count(),
+                  "donate_pools": "never"}
         with open(out_path, "w") as f:
-            json.dump({"rows": rows, "arrival_rate": rate,
-                       "requests": LAT_NREQ, "gen": LAT_GEN,
-                       "makespan_s": makespan,
-                       "ttft_s": ttft, "tpot_s": tpot,
-                       "queue_wait_s": qwait,
-                       "phases_s": phases,
-                       "counters": tel.registry.counter_values()}, f,
-                      indent=1)
+            json.dump({"rows": rows, **common, "modes": modes,
+                       "comparison": {
+                           "bubble_sync": sy["bubble_fraction"],
+                           "bubble_async": an["bubble_fraction"],
+                           "tpot_p50_sync_s": tpot["p50"],
+                           "tpot_p50_async_s": an["tpot_s"]["p50"],
+                           "async_lower_bubble":
+                               an["bubble_fraction"]
+                               < sy["bubble_fraction"],
+                       }}, f, indent=1)
+        # sibling file so CI's serving_latency*.json glob captures the
+        # async mode as its own artifact
+        with open(_sibling(out_path, "_async"), "w") as f:
+            json.dump({**common, "mode": "async", **an}, f, indent=1)
     if trace_path:
         os.makedirs(os.path.dirname(trace_path) or ".", exist_ok=True)
-        write_chrome(tel.trace, trace_path)
+        write_chrome(traces["sync"], trace_path)
+        write_chrome(traces["async"], _sibling(trace_path, "_async"))
     return rows
 
 

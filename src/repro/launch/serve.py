@@ -89,7 +89,7 @@ def build_engine(cfg, model, params, args, draft_model=None,
         prefix_caching=not args.no_prefix_caching,
         spec_k=args.spec_k, spec_ema=args.spec_ema,
         draft_cache_dtype=args.draft_cache_dtype,
-        cache_dtype=args.cache_dtype),
+        cache_dtype=args.cache_dtype, async_step=args.async_step),
         draft_model=draft_model, draft_params=draft_params, mesh=mesh,
         telemetry=telemetry)
 
@@ -131,6 +131,11 @@ def main():
                     help="target KV pool dtype: float32/bfloat16 cast; "
                          "int8/fp8_e4m3 quantize with fused kernel "
                          "dequant (default: model dtype)")
+    ap.add_argument("--async-step", action="store_true",
+                    help="double-buffered engine steps: plan/dispatch "
+                         "step N+1 while step N's device work is in "
+                         "flight (DESIGN.md §13; outputs stay "
+                         "byte-identical at temperature 0)")
     ap.add_argument("--mesh", default="",
                     help="serving mesh 'DxM' (data x model) or 'auto'; "
                          "empty = single-device engine")
@@ -222,8 +227,8 @@ def main():
         from repro.obs import prometheus_text
         reg = telemetry.registry
         print("\n-- step phases (per-step wall, us) --")
-        for name in ("step", "plan", "prefill_dispatch", "decode_dispatch",
-                     "sync", "fold"):
+        for name in ("step", "plan", "overlap", "prefill_dispatch",
+                     "decode_dispatch", "sync", "fold"):
             h = reg.histograms.get("phase/" + name)
             if h is None:
                 continue
@@ -231,6 +236,12 @@ def main():
             print(f"{name:18s} p50 {s['p50'] * 1e6:9.1f}  "
                   f"p99 {s['p99'] * 1e6:9.1f}  "
                   f"mean {s['mean'] * 1e6:9.1f}  n={s['count']}")
+        step_h = reg.histograms.get("phase/step")
+        sync_h = reg.histograms.get("phase/sync")
+        if step_h is not None and step_h.total > 0 and sync_h is not None:
+            print(f"host bubble fraction "
+                  f"{sync_h.total / step_h.total:.3f} "
+                  f"(phase sync / phase step wall)")
         lat = [(out[r].queue_wait_s, out[r].preempt_stall_s, out[r].tpot_s)
                for r in out]
         print(f"mean queue wait {np.mean([x[0] for x in lat]) * 1e3:.2f}ms | "

@@ -4,8 +4,9 @@ The engine records three raw event kinds into a ``TraceBuffer`` (host
 wall clock only — never on a jitted path):
 
   - **phase events**: (step, name, t0, t1) — one per engine-step phase
-    (plan / prefill_dispatch / decode_dispatch / sync / fold), plus an
-    enclosing ``step`` phase they nest inside;
+    (plan / prefill_dispatch / decode_dispatch / sync / fold, plus
+    ``overlap`` around the async pipeline's predicted plan+dispatch),
+    and an enclosing ``step`` phase they nest inside;
   - **span events**: (rid, kind, t) — per-request lifecycle points
     (submit, admit, first_chunk, first_token, preempt, resume, finish);
   - **counter samples**: (t, name, values) — pool occupancy and prefix
@@ -25,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
+from collections import deque
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,32 +58,50 @@ SPAN_CLOSE = "finish"
 
 
 class TraceBuffer:
-    def __init__(self, clock=time.perf_counter):
+    """Bounded ring of trace events.
+
+    A long-lived server records phases/spans/counters on every step
+    forever; an unbounded list is a slow host-memory leak.  Each event
+    kind keeps at most ``capacity`` entries — overflow drops the
+    *oldest* event (the exported trace keeps the most recent window,
+    which is what you want when attaching to a misbehaving server) and
+    counts it in ``dropped_events``, so a truncated export is
+    detectable rather than silently partial."""
+
+    def __init__(self, clock=time.perf_counter, capacity: int = 65536):
         self.clock = clock
         self.epoch = clock()
-        self.phases: list[PhaseEvent] = []
-        self.spans: list[SpanEvent] = []
-        self.counters: list[CounterSample] = []
+        self.capacity = capacity
+        self.phases: deque[PhaseEvent] = deque(maxlen=capacity)
+        self.spans: deque[SpanEvent] = deque(maxlen=capacity)
+        self.counters: deque[CounterSample] = deque(maxlen=capacity)
+        self.dropped_events = 0
 
     def now(self) -> float:
         return self.clock()
 
+    def _push(self, dq: deque, ev) -> None:
+        if len(dq) == dq.maxlen:
+            self.dropped_events += 1
+        dq.append(ev)
+
     def add_phase(self, step: int, name: str, t0: float, t1: float) -> None:
-        self.phases.append(PhaseEvent(step, name, t0, t1))
+        self._push(self.phases, PhaseEvent(step, name, t0, t1))
 
     def add_span(self, rid: int, kind: str, t: float | None = None) -> None:
-        self.spans.append(SpanEvent(rid, kind,
-                                    self.clock() if t is None else t))
+        self._push(self.spans,
+                   SpanEvent(rid, kind, self.clock() if t is None else t))
 
     def add_counter(self, name: str, values: dict[str, float],
                     t: float | None = None) -> None:
-        self.counters.append(CounterSample(
+        self._push(self.counters, CounterSample(
             self.clock() if t is None else t, name, dict(values)))
 
     def clear(self) -> None:
         self.phases.clear()
         self.spans.clear()
         self.counters.clear()
+        self.dropped_events = 0
 
 
 def to_chrome(buf: TraceBuffer) -> dict:

@@ -1,8 +1,9 @@
-from repro.serve.engine import Engine, FinishedRequest, ServeConfig
+from repro.serve.engine import (Engine, EngineOverloaded, FinishedRequest,
+                                ServeConfig)
 from repro.serve.kv_cache import BlockAllocator, OutOfBlocks, PagedCache
 from repro.serve.scheduler import (FCFSScheduler, Request, RequestState,
                                    StepPlan)
 
-__all__ = ["Engine", "FinishedRequest", "ServeConfig", "BlockAllocator",
-           "OutOfBlocks", "PagedCache", "FCFSScheduler", "Request",
-           "RequestState", "StepPlan"]
+__all__ = ["Engine", "EngineOverloaded", "FinishedRequest", "ServeConfig",
+           "BlockAllocator", "OutOfBlocks", "PagedCache", "FCFSScheduler",
+           "Request", "RequestState", "StepPlan"]

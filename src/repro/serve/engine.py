@@ -95,7 +95,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import tree_shardings, use_rules
 from repro.kernels.paged_attention import CACHE_DTYPES, is_quantized
-from repro.obs import NULL_CTX, Telemetry
+from repro.obs import DEFAULT_TIME_BUCKETS, NULL_CTX, Telemetry
 from repro.serve.kv_cache import PagedCache
 from repro.serve.scheduler import FCFSScheduler, Request, RequestState
 
@@ -128,6 +128,23 @@ class ServeConfig:
                                       # "int8"/"fp8_e4m3" quantize with
                                       # per-write scale pools and fused
                                       # kernel dequant (DESIGN.md §11)
+    async_step: bool = False          # run()/stream() drive step_async():
+                                      # double-buffered submit/reconcile
+                                      # pipeline (DESIGN.md §13); outputs
+                                      # stay byte-identical at temp 0
+    donate_pools: str = "auto"        # donate KV pools into the jitted
+                                      # steps ("always"/"never"); "auto"
+                                      # donates except for async_step on
+                                      # the CPU backend: XLA:CPU acquires
+                                      # donated buffers synchronously at
+                                      # dispatch (the call blocks for the
+                                      # whole step compute), which would
+                                      # serialize the pipeline, so async
+                                      # CPU trades the aliasing for an
+                                      # extra pool copy (DESIGN.md §13)
+    max_waiting: int = 0              # backpressure: add_request raises
+                                      # EngineOverloaded once this many
+                                      # requests wait (0 = unbounded)
 
     @property
     def blocks_per_seq(self) -> int:
@@ -138,6 +155,12 @@ class ServeConfig:
             return self.num_blocks
         # worst case every slot full, +1 for the reserved null block
         return self.max_seqs * self.blocks_per_seq + 1
+
+
+class EngineOverloaded(RuntimeError):
+    """Backpressure-aware admission (ServeConfig.max_waiting): the
+    waiting queue is full, so ``add_request`` refuses instead of growing
+    host state without bound.  Callers shed load or retry later."""
 
 
 @dataclasses.dataclass
@@ -155,6 +178,35 @@ class FinishedRequest:
                                       # first token (0 for 1-token requests)
     spec_proposed: int = 0            # draft tokens offered to verification
     spec_accepted: int = 0            # draft tokens the target accepted
+    finish_reason: str = "length"     # stop | length | cancelled | deadline
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched-but-unreconciled engine step: the async pipeline's
+    in-flight record (DESIGN.md §13).
+
+    Holds the plan, the device output arrays awaiting the step's single
+    ``device_get``, and the fold metadata captured *at submit time* —
+    which rows sample a token (``emit``), where each sampling request's
+    token lives in the fetch arrays (``src``, the next step's
+    device-side token feed), and rows a later reconcile cancelled
+    (mispredicted finishes) whose samples must be discarded.  ``folded``
+    marks that ``_predict_fold`` already advanced the host cursors, so
+    ``_reconcile`` only materializes token values."""
+    plan: Any
+    running: list[RequestState]
+    fetch: dict[str, Any] = dataclasses.field(default_factory=dict)
+    pre_rows: list[tuple[RequestState, int]] = \
+        dataclasses.field(default_factory=list)      # sampled prefill rows
+    decode_rows: list[tuple[RequestState, int, bool]] = \
+        dataclasses.field(default_factory=list)      # (state, slot, emit)
+    spec_meta: list[tuple[RequestState, int, int]] = \
+        dataclasses.field(default_factory=list)
+    src: dict[int, tuple[str, int]] = \
+        dataclasses.field(default_factory=dict)      # rid -> (array, slot)
+    cancelled: set[int] = dataclasses.field(default_factory=set)
+    folded: bool = False
 
 
 class Engine:
@@ -219,6 +271,13 @@ class Engine:
             if getattr(self.cfg, field) not in CACHE_DTYPES:
                 raise ValueError(f"{field} {getattr(self.cfg, field)!r} "
                                  f"not in {CACHE_DTYPES}")
+        if self.cfg.donate_pools not in ("auto", "always", "never"):
+            raise ValueError(f"donate_pools {self.cfg.donate_pools!r} "
+                             f"not in ('auto', 'always', 'never')")
+        self._donate_pools = {
+            "auto": not (self.cfg.async_step
+                         and jax.default_backend() == "cpu"),
+            "always": True, "never": False}[self.cfg.donate_pools]
         self.cache = model.init_paged_cache(
             num_blocks=self.cfg.pool_blocks(),
             block_size=self.cfg.block_size,
@@ -300,7 +359,8 @@ class Engine:
             in_specs, out_specs = self._dp_specs(which)
             impl = shard_map(impl, mesh=self.mesh, in_specs=in_specs,
                              out_specs=out_specs, check_rep=False)
-        return jax.jit(impl, donate_argnums=donate,
+        return jax.jit(impl,
+                       donate_argnums=donate if self._donate_pools else (),
                        **self._jit_shardings(which))
 
     def _dp_specs(self, which: str):
@@ -427,6 +487,11 @@ class Engine:
         self._preempt_wall: dict[int, float] = {}
         self._preempt_stall: dict[int, float] = {}
         self._chunked: set[int] = set()   # rids whose first chunk is logged
+        # async pipeline + serving front-end state (DESIGN.md §13)
+        self._pending: _Inflight | None = None
+        self._on_token: dict[int, Any] = {}    # rid -> streaming callback
+        self._deadline: dict[int, float] = {}  # rid -> absolute wall time
+        self._drained = 0    # scheduler.finished entries already reported
 
     # back-compat accessors: these were plain attributes before the
     # registry existed and are still read by tests/benchmarks
@@ -588,16 +653,104 @@ class Engine:
     # ----- public API -----
     def add_request(self, prompt: Iterable[int], max_new_tokens: int = 32,
                     temperature: float = 0.0,
-                    stop_tokens: Iterable[int] = ()) -> int:
+                    stop_tokens: Iterable[int] = (),
+                    on_token=None, deadline_s: float | None = None) -> int:
+        """Queue one request; returns its rid.
+
+        ``on_token(token, done)`` streams every sampled token as the
+        step that produced it folds (async mode: one step after
+        dispatch); a tokenless finish (cancellation, deadline) calls it
+        once with ``(None, True)``.  ``deadline_s`` is a wall-clock
+        budget from submission — the request is cancelled (finish_reason
+        "deadline") at the first step boundary past it, admitted or not.
+        Raises EngineOverloaded when ``max_waiting`` requests already
+        wait (backpressure), ValueError on degenerate requests (empty
+        prompt, non-positive max_new_tokens, prompt+budget beyond
+        capacity)."""
+        if self.cfg.max_waiting and \
+                len(self.scheduler.waiting) >= self.cfg.max_waiting:
+            raise EngineOverloaded(
+                f"waiting queue full ({self.cfg.max_waiting}); "
+                f"shed load or retry")
         rid = self._rid
-        self._rid += 1
-        self._submit_wall[rid] = time.time()
-        self.obs.event("submit", rid)
-        self.scheduler.add(Request(
-            rid=rid, prompt=tuple(int(t) for t in prompt),
+        self.scheduler.add(Request(     # validates; raises before any
+            rid=rid, prompt=tuple(int(t) for t in prompt),   # state lands
             max_new_tokens=max_new_tokens, temperature=temperature,
             stop_tokens=tuple(stop_tokens)))
+        self._rid += 1
+        now = time.time()
+        self._submit_wall[rid] = now
+        self.obs.event("submit", rid)
+        if on_token is not None:
+            self._on_token[rid] = on_token
+        if deadline_s is not None:
+            self._deadline[rid] = now + deadline_s
         return rid
+
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
+        """Cancel a request by rid; True if it was still live.  Waiting
+        requests finish immediately; running ones retire at the next
+        scheduling round (their blocks free there), and any sample of
+        theirs still in flight is discarded at reconcile."""
+        self._deadline.pop(rid, None)
+        for s in self.scheduler.running:
+            if s.req.rid == rid and not s.done:
+                self._finish_early(s, reason)
+                return True
+        for s in self.scheduler.waiting:
+            if s.req.rid == rid:
+                self._finish_early(s, reason)
+                self.scheduler.drop_waiting(s)
+                return True
+        return False
+
+    def _finish_early(self, s: RequestState, reason: str) -> None:
+        s.stopped = True
+        s.finish_reason = reason
+        rid = s.req.rid
+        self._finish_step[rid] = self._steps
+        self.obs.event("finish", rid)
+        cb = self._on_token.pop(rid, None)
+        if cb is not None:
+            cb(None, True)
+
+    def _expire_deadlines(self) -> None:
+        if not self._deadline:
+            return
+        now = time.time()
+        for rid, t in list(self._deadline.items()):
+            if now >= t:
+                self.cancel(rid, reason="deadline")
+
+    @property
+    def pending_step(self) -> bool:
+        """True while a dispatched step awaits reconciliation — async
+        drivers must keep stepping until both the queue and this drain."""
+        return self._pending is not None
+
+    def stream(self, prompt: Iterable[int], max_new_tokens: int = 32,
+               temperature: float = 0.0, stop_tokens: Iterable[int] = (),
+               deadline_s: float | None = None):
+        """Generate one request's tokens as a plain iterator, driving
+        the engine between yields (``step_async`` when
+        ``cfg.async_step``).  Other queued requests ride the same steps
+        — continuous batching is unaffected."""
+        buf: list[tuple[int | None, bool]] = []
+        self.add_request(prompt, max_new_tokens=max_new_tokens,
+                         temperature=temperature, stop_tokens=stop_tokens,
+                         on_token=lambda t, d: buf.append((t, d)),
+                         deadline_s=deadline_s)
+        step = self.step_async if self.cfg.async_step else self.step
+        while True:
+            while buf:
+                tok, done = buf.pop(0)
+                if tok is not None:
+                    yield tok
+                if done:
+                    return
+            if not (self.scheduler.has_work or self.pending_step):
+                return
+            step()
 
     def _append_sample(self, s: RequestState, tok: int) -> None:
         self._c["decode_tokens"].inc()
@@ -606,13 +759,31 @@ class Engine:
         if not s.generated:
             self._first_tok_wall[rid] = now
             self.obs.event("first_token", rid)
+            if rid in self._submit_wall:
+                self.obs.observe("latency/ttft_s",
+                                 now - self._submit_wall[rid],
+                                 buckets=DEFAULT_TIME_BUCKETS)
+        elif rid in self._last_tok_wall:
+            # streaming cares about the inter-token distribution, not
+            # just the TPOT mean run() reports
+            self.obs.observe("latency/itl_s",
+                             now - self._last_tok_wall[rid],
+                             buckets=DEFAULT_TIME_BUCKETS)
         self._last_tok_wall[rid] = now
         s.generated.append(tok)
         if tok in s.req.stop_tokens:
             s.stopped = True
+            s.finish_reason = "stop"
         if s.done:
+            if not s.finish_reason:
+                s.finish_reason = "length"
             self._finish_step[rid] = self._steps + 1
             self.obs.event("finish", rid)
+        cb = self._on_token.get(rid)
+        if cb is not None:
+            cb(tok, s.done)
+            if s.done:
+                del self._on_token[rid]
 
     def _fetch(self, tree):
         """The step's single device->host synchronization point: one
@@ -663,30 +834,133 @@ class Engine:
             self.obs.sample("prefix", {
                 "lookups": c.prefix_lookups, "hits": c.prefix_hits,
                 "hit_rate": c.prefix_hits / max(c.prefix_lookups, 1)})
+        # host bubble fraction: the share of step wall spent blocked in
+        # the device_get — the async pipeline's before/after number
+        # (sync engine ~= device time / step; overlap shrinks it)
+        hists = self.obs.registry.histograms
+        step_h = hists.get("phase/step")
+        if step_h is not None and step_h.total > 0:
+            sync_h = hists.get("phase/sync")
+            self.obs.sample("engine", {
+                "bubble_fraction": (sync_h.total / step_h.total)
+                if sync_h is not None else 0.0})
 
     def step(self) -> list[RequestState]:
-        """One engine step: schedule, run prefill chunks + the decode (or
-        draft/verify) batch, fetch the results in one transfer, fold
-        them back."""
+        """One lockstep engine step: schedule, run prefill chunks + the
+        decode (or draft/verify) batch, fetch the results in one
+        transfer, fold them back.  Any async-pipelined step still in
+        flight reconciles first, so mixed ``step``/``step_async``
+        driving stays safe."""
         with self._trace_ctx():
             with self._phase("step"):
-                out = self._step_host()
+                self._expire_deadlines()
+                if self._pending is not None:
+                    rec, self._pending = self._pending, None
+                    self._reconcile(rec)
+                rec = self._submit_step()
+                if rec is not None:
+                    self._reconcile(rec)
+            if self.obs.enabled:
+                self._sample_gauges()
+            return rec.running if rec is not None else []
+
+    def step_async(self) -> list[RequestState]:
+        """One double-buffered engine step (DESIGN.md §13): while the
+        previous step's device work is in flight, predict its host fold
+        (decode growth is deterministic; only sampled *values* are
+        unknown), plan and dispatch the next step from that predicted
+        state — feeding still-unfetched tokens device-to-device — then
+        reconcile the previous step on its (now overlapped) sync.  Falls
+        back to lockstep when prediction is unsafe: speculative decode
+        or possible preemption (``_can_overlap``).  Returns the set the
+        *submitted* step runs; its tokens fold one call later."""
+        with self._trace_ctx():
+            with self._phase("step"):
+                out = self._step_async_host()
             if self.obs.enabled:
                 self._sample_gauges()
             return out
 
-    def _step_host(self) -> list[RequestState]:
+    def _step_async_host(self) -> list[RequestState]:
+        self._expire_deadlines()
+        prev, self._pending = self._pending, None
+        if prev is not None and self._can_overlap(prev):
+            # the overlap phase measures exactly the host work hidden
+            # under the in-flight device step (the de-bubbled time)
+            with self._phase("overlap"):
+                self._predict_fold(prev)
+                rec = self._submit_step(prev=prev)
+            self._reconcile(prev, newer=rec)
+            self._pending = rec
+            return rec.running if rec is not None else []
+        if prev is not None:              # lockstep fall-back: resolve
+            self._reconcile(prev)         # the true state, then plan
+        rec = self._submit_step()
+        self._pending = rec
+        return rec.running if rec is not None else []
+
+    def _can_overlap(self, rec: _Inflight) -> bool:
+        """Conservative gate for planning on predicted state, evaluated
+        *before* the predicted plan mutates anything.  Overlap needs (a)
+        no speculative decode — accepted-draft growth is variable, so
+        the next plan depends on the unfetched acceptance counts — and
+        (b) a proof the predicted scheduling round cannot preempt: every
+        running slot's next-position growth must be backable from the
+        free+evictable pool (preemption would re-prefill from ``seq``,
+        which cannot include in-flight token values).  Admission, COW
+        and retirement are all prediction-safe and stay overlapped."""
+        if self.spec_active:
+            return False
+        cache = self.cache_host
+        will_advance = {s.req.rid for s, _, _ in rec.decode_rows}
+        need = 0
+        for s in self.scheduler.running:
+            nc = s.num_cached + (1 if s.req.rid in will_advance else 0)
+            need += cache.blocks_needed(s.slot, nc + 1)
+        return need <= cache.allocator.num_available
+
+    def _predict_fold(self, rec: _Inflight) -> None:
+        """Advance host cursors for a dispatched-but-unfetched step: the
+        device KV writes are deterministic and have (logically) happened,
+        so ``num_cached`` grows now; the sampled token *values* are still
+        in flight and tracked as ``pending`` until reconcile materializes
+        them.  Rows cancelled by an earlier reconcile (mispredicted
+        finish) are skipped entirely — their growth never existed."""
+        rec.folded = True
+        for s, _ in rec.pre_rows:
+            if s.req.rid not in rec.cancelled:
+                s.pending += 1
+        for s, _, emit in rec.decode_rows:
+            if s.req.rid in rec.cancelled:
+                continue
+            s.num_cached += 1
+            if emit:
+                s.pending += 1
+            else:                         # still streaming known tokens
+                self._c["prefill_tokens"].inc()
+
+    def _submit_step(self, prev: _Inflight | None = None
+                     ) -> _Inflight | None:
+        """The step's host half: schedule, run COW copies, dispatch the
+        prefill and decode (or draft/verify) device calls.  Everything
+        here is async — no host<->device synchronization.  With ``prev``
+        (async overlap), decode rows whose next token is still in flight
+        read it straight from ``prev``'s device output arrays."""
         spec_k = self.cfg.spec_k if self.spec_active else 0
         with self._phase("plan"):
             plan = self.scheduler.plan_step(self.cfg.chunk_size,
                                             self.cfg.prefill_budget, spec_k,
                                             self.cfg.spec_ema)
         self._note_transitions(plan)
+        if prev is not None:
+            # _can_overlap proved the pool could back every growth
+            assert not plan.preempted, \
+                "overlap gate let a preemption through"
         running = plan.decode + [s for s, _ in plan.prefill]
         for s in running:
             self._admit_step.setdefault(s.req.rid, self._steps)
         if not running:
-            return []
+            return None
 
         for src, dst in plan.copies:          # copy-on-write pool copies
             self.cache = self._cow_fn(self.cache, np.int32(src),
@@ -696,50 +970,119 @@ class Engine:
                     self.draft_cache, np.int32(src), np.int32(dst))
             self._c["cow_copies"].inc()
 
-        fetch: dict[str, Any] = {}            # one device_get at the end
-        sampled_prefills: list[RequestState] = []
+        rec = _Inflight(plan=plan, running=running)
 
         if plan.prefill:
+            sampled: list[RequestState] = []
             with self._phase("prefill_dispatch"):
-                self._dispatch_prefill(plan, spec_k, fetch, sampled_prefills)
+                self._dispatch_prefill(plan, spec_k, rec.fetch, sampled)
+            rec.pre_rows = [(s, s.slot) for s in sampled]
 
-        spec_meta: list[tuple[RequestState, int, int]] = []
         if plan.decode:
             with self._phase("decode_dispatch"):   # plain, or draft+verify
-                self._dispatch_decode(plan, spec_k, fetch, spec_meta)
+                self._dispatch_decode(plan, spec_k, rec.fetch,
+                                      rec.spec_meta, prev)
+            if not (spec_k and plan.spec):
+                # fold metadata, captured before anything moves: emit is
+                # sync-fold's "model just saw the last known token" test
+                rec.decode_rows = [(s, s.slot,
+                                    s.num_cached == s.seq_len - 1)
+                                   for s in plan.decode]
+        for s, slot, emit in rec.decode_rows:
+            if emit:
+                rec.src[s.req.rid] = ("dec", slot)
+        for s, slot in rec.pre_rows:
+            rec.src[s.req.rid] = ("pre", slot)
+        return rec
 
+    def _reconcile(self, rec: _Inflight, newer: _Inflight | None = None
+                   ) -> None:
+        """The step's sync half: the ONE ``device_get``, then fold the
+        fetched values into request state.  For a predict-folded record
+        only token values materialize (``pending`` drains); otherwise
+        this is the classic lockstep fold.  A token that finishes its
+        request mid-pipeline (stop token, or a cancel that landed while
+        the step flew) cancels the request's row in the ``newer``
+        in-flight record — the misprediction rollback."""
         with self._phase("sync"):             # the ONE device_get per step
-            vals = self._fetch(fetch) if fetch else {}
+            vals = self._fetch(rec.fetch) if rec.fetch else {}
 
         with self._phase("fold"):
-            for s in sampled_prefills:
-                self._append_sample(s, int(vals["pre"][s.slot]))
+            for s, slot in rec.pre_rows:
+                if s.req.rid in rec.cancelled:
+                    continue                  # predict skipped it entirely
+                if rec.folded:
+                    s.pending -= 1
+                if s.stopped:                 # cancelled mid-flight: the
+                    continue                  # sample is discarded
+                self._append_sample(s, int(vals["pre"][slot]))
+                if s.done:
+                    self._cancel_inflight(s, newer)
 
-            if "dec" in vals:
-                for s in plan.decode:
-                    was_last_known = s.num_cached == s.seq_len - 1
-                    s.num_cached += 1
-                    if not was_last_known:    # still streaming known tokens
-                        self._c["prefill_tokens"].inc()
+            if "out" in vals:                 # spec cycles are lockstep:
+                self._fold_spec(rec.plan, vals["out"], vals["acc"],
+                                rec.spec_meta)
+            else:
+                for s, slot, emit in rec.decode_rows:
+                    if s.req.rid in rec.cancelled:
                         continue
-                    self._append_sample(s, int(vals["dec"][s.slot]))
-            elif "out" in vals:
-                self._fold_spec(plan, vals["out"], vals["acc"], spec_meta)
+                    if not rec.folded:
+                        s.num_cached += 1
+                        if not emit:          # still streaming known tokens
+                            self._c["prefill_tokens"].inc()
+                            continue
+                    else:
+                        if not emit:
+                            continue          # counted at predict time
+                        s.pending -= 1
+                    if s.stopped:
+                        continue
+                    self._append_sample(s, int(vals["dec"][slot]))
+                    if s.done:
+                        self._cancel_inflight(s, newer)
 
             self._c["steps"].inc()
             self.scheduler.commit_progress()  # register newly-full blocks
-        return running
+            # commit_progress hashes s.seq[:num_cached], which clamps to
+            # *known* tokens — blocks holding a pending token's KV only
+            # register once its value materializes
 
-    def _dispatch_decode(self, plan, spec_k, fetch, spec_meta):
+    def _cancel_inflight(self, s: RequestState, rec: _Inflight | None
+                         ) -> None:
+        """Misprediction rollback: ``s`` just finished at reconcile, but
+        the next step was already planned and dispatched from the
+        predicted still-running state.  Discard its row in that record
+        (the in-flight sample never folds; ``_predict_fold`` skips its
+        growth) and hand back the blocks the predicted plan over-
+        reserved — the same ``PagedCache.truncate`` rollback speculative
+        decode uses; the slot's in-flight garbage KV write lands in a
+        freed block that is re-written before any gated read."""
+        rid = s.req.rid
+        if rec is None or rid not in rec.src or rid in rec.cancelled:
+            return
+        rec.cancelled.add(rid)
+        if s.slot >= 0:
+            self.cache_host.truncate(s.slot, s.num_cached)
+
+    def _dispatch_decode(self, plan, spec_k, fetch, spec_meta, prev=None):
         """Build the fixed-shape decode batch and launch either the plain
-        decode step or the speculative draft/verify cycle."""
+        decode step or the speculative draft/verify cycle.  Under async
+        overlap, rows with a pending token splice it in from the previous
+        step's device arrays (``jnp.where`` on device — the token value
+        never round-trips through the host)."""
         B = self.cfg.max_seqs
         tokens = np.zeros((B,), np.int32)
         positions = np.zeros((B,), np.int32)
         temps = np.zeros((B,), np.float32)
         active = np.zeros((B,), bool)
+        feed = {"dec": np.zeros((B,), bool), "pre": np.zeros((B,), bool)}
         for s in plan.decode:
-            tokens[s.slot] = s.next_token
+            if s.pending:
+                src, pslot = prev.src[s.req.rid]
+                assert pslot == s.slot     # no preemption while pending
+                feed[src][s.slot] = True
+            else:
+                tokens[s.slot] = s.next_token
             positions[s.slot] = s.num_cached
             temps[s.slot] = s.req.temperature
             active[s.slot] = True
@@ -751,9 +1094,14 @@ class Engine:
                 plan, tokens, positions, temps, active, tables,
                 spec_meta)
         else:
+            tok = jnp.asarray(tokens)
+            for name, mask in feed.items():
+                if mask.any():
+                    tok = jnp.where(jnp.asarray(mask), prev.fetch[name],
+                                    tok)
             self._key, sub = jax.random.split(self._key)
             nxt, self.cache = self._step_fn(
-                self.params, self.cache, jnp.asarray(tokens),
+                self.params, self.cache, tok,
                 jnp.asarray(positions), jnp.asarray(tables),
                 jnp.asarray(temps), jnp.asarray(active), sub)
             fetch["dec"] = nxt
@@ -921,30 +1269,67 @@ class Engine:
             tpot_s=(max(lt - ft, 0.0) / (n - 1)
                     if n > 1 and ft is not None and lt is not None else 0.0),
             spec_proposed=s.spec_proposed,
-            spec_accepted=s.spec_accepted)
+            spec_accepted=s.spec_accepted,
+            finish_reason=s.finish_reason or
+            ("stop" if s.stopped else "length"))
+
+    def _forget_rid(self, rid: int) -> None:
+        """Retire one drained request's per-rid host bookkeeping — a
+        long-lived server would otherwise grow these dicts with every
+        request it ever served."""
+        for d in (self._admit_step, self._finish_step, self._submit_wall,
+                  self._first_tok_wall, self._last_tok_wall,
+                  self._queue_wait, self._preempt_wall,
+                  self._preempt_stall, self._deadline, self._on_token):
+            d.pop(rid, None)
+        self._chunked.discard(rid)
 
     def finished(self) -> dict[int, FinishedRequest]:
         """Records for every request finished so far (manual ``step()``
         driving included — open-loop benchmarks use this after draining
-        the queue themselves)."""
+        the queue themselves).  Non-destructive: latency fields are only
+        valid for requests not yet drained by ``run()``/
+        ``pop_finished()`` (draining retires the per-rid wall clocks)."""
         return {s.req.rid: self._record(s) for s in self.scheduler.finished}
+
+    def pop_finished(self) -> dict[int, FinishedRequest]:
+        """Drain finished requests destructively: build each record,
+        then retire its per-rid bookkeeping and the scheduler's finished
+        list.  Long-lived manual-stepping servers call this instead of
+        ``finished()`` so host memory stays bounded by requests in
+        flight, not requests ever served."""
+        recs = {s.req.rid: self._record(s)
+                for s in self.scheduler.finished}
+        for rid in recs:
+            self._forget_rid(rid)
+        self.scheduler.finished.clear()
+        self._drained = 0
+        return recs
 
     def run(self, requests: Iterable[dict[str, Any]] | None = None
             ) -> tuple[dict[int, FinishedRequest], dict[str, float]]:
-        """Drive until the queue drains.  Returns ({rid: result}, stats)."""
+        """Drive until the queue drains (``step_async`` pipeline when
+        ``cfg.async_step``).  Returns ({rid: result}, stats); drained
+        requests' per-rid wall clocks are retired with their records."""
         if requests:
             for r in requests:
                 self.add_request(**r)
-        # registry snapshot so repeated run() calls report THIS drain only
+        # registry snapshot so repeated run() calls report THIS drain
+        # only; the drained boundary (not len(finished) at entry) so
+        # requests cancelled between runs still report here
         c0 = self.obs.registry.counter_values("serve/")
-        fin0 = len(self.scheduler.finished)
+        fin0 = self._drained
+        step = self.step_async if self.cfg.async_step else self.step
         t0 = time.time()
-        while self.scheduler.has_work:
-            self.step()
+        while self.scheduler.has_work or self.pending_step:
+            step()
         dt = time.time() - t0
 
         out = {s.req.rid: self._record(s)
                for s in self.scheduler.finished[fin0:]}
+        self._drained = len(self.scheduler.finished)
+        for rid in out:
+            self._forget_rid(rid)
         d = {k: float(c.value - c0["serve/" + k])
              for k, c in self._c.items()}
         dec, pre = d["decode_tokens"], d["prefill_tokens"]

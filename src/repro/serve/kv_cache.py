@@ -275,6 +275,14 @@ class PagedCache:
     def owned(self, slot: int) -> list[int]:
         return list(self._owned[slot])
 
+    def blocks_needed(self, slot: int, n_tokens: int) -> int:
+        """Blocks ``ensure(slot, n_tokens)`` would have to allocate —
+        the speculative-reservation probe the async engine's overlap gate
+        sums over running slots to prove the *predicted* next plan cannot
+        hit OutOfBlocks (and therefore cannot preempt); see DESIGN.md
+        §13.  Pure query, no allocation."""
+        return max(0, self.blocks_for(n_tokens) - len(self._owned[slot]))
+
     # ----- prefix caching -----
     def _forget_block(self, block: int) -> None:
         h = self._hash_of.pop(block)

@@ -56,6 +56,14 @@ class RequestState:
     generated: list[int] = dataclasses.field(default_factory=list)
     preemptions: int = 0
     stopped: bool = False
+    # async double-buffered stepping (engine step_async; DESIGN.md §13):
+    # tokens sampled on device but not yet fetched to the host.  The
+    # device has written their KV (so ``num_cached`` counts them) and the
+    # next step feeds them device-to-device; the host learns their values
+    # at the overlapped reconcile.  Always 0 in lockstep/sync mode.
+    pending: int = 0
+    finish_reason: str = ""           # ""=in flight; stop/length/
+                                      # cancelled/deadline once finished
     # speculative decoding (engine spec mode; DESIGN.md §9)
     draft_cached: int = 0             # tokens written to the *draft* pool
     spec_proposed: int = 0            # draft tokens offered to verification
@@ -73,7 +81,11 @@ class RequestState:
 
     @property
     def seq_len(self) -> int:
-        return len(self.req.prompt) + len(self.generated)
+        """Sequence length *including* in-flight pending tokens: the
+        length the KV pool must back and the planner schedules against.
+        ``seq``/``next_token`` deliberately exclude pending — the host
+        does not know those token values yet."""
+        return len(self.req.prompt) + len(self.generated) + self.pending
 
     @property
     def next_token(self) -> int:
@@ -88,7 +100,11 @@ class RequestState:
 
     @property
     def done(self) -> bool:
-        return self.stopped or len(self.generated) >= self.req.max_new_tokens
+        # pending tokens count toward the budget: a predicted plan must
+        # not schedule work past max_new_tokens (the in-flight sample is
+        # the final token; reconcile appends it after retirement)
+        return self.stopped or \
+            len(self.generated) + self.pending >= self.req.max_new_tokens
 
     def reset_for_preemption(self) -> None:
         self.slot = -1
@@ -150,6 +166,12 @@ class FCFSScheduler:
 
     # ----- queue -----
     def add(self, req: Request) -> RequestState:
+        if req.max_new_tokens <= 0:
+            # previously admitted and still generated one token (done
+            # only fires after a sample lands); reject up front instead
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1, "
+                f"got {req.max_new_tokens}")
         if len(req.prompt) + req.max_new_tokens > self.cache.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt+max_new "
@@ -172,6 +194,13 @@ class FCFSScheduler:
     @property
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
+
+    def drop_waiting(self, st: RequestState) -> None:
+        """Retire a not-yet-admitted request (cancellation / deadline
+        expiry before admission): straight to finished, no slot or
+        blocks were ever held."""
+        self.waiting.remove(st)
+        self.finished.append(st)
 
     # ----- per-step transitions -----
     def retire_finished(self) -> list[RequestState]:
@@ -222,6 +251,10 @@ class FCFSScheduler:
         admitted = []
         while self.waiting and self._free_slots:
             cand = self.waiting[0]
+            if cand.done:       # cancelled/expired while waiting: never
+                self.waiting.popleft()        # serve it, finish cleanly
+                self.finished.append(cand)
+                continue
             slot = self._pick_slot()
             seq = cand.seq
             copies: list[tuple[int, int]] = []

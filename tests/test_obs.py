@@ -125,6 +125,63 @@ def test_prometheus_text_format():
     assert snap["counters"]["serve/steps"] == 3
 
 
+def test_prometheus_name_collisions_disambiguated():
+    """_sanitize is lossy (serve/steps and serve_steps both map to
+    repro_serve_steps): colliding metrics must get distinct exported
+    series, not silently merge, and every series carries a HELP line
+    naming its original metric."""
+    reg = MetricsRegistry()
+    reg.counter("serve/steps").inc(1)
+    reg.counter("serve_steps").inc(2)
+    reg.counter("serve-steps").inc(4)
+    reg.gauge("pool/free").set(7)
+    reg.gauge("pool_free").set(9)
+    text = prometheus_text(reg)
+    lines = text.splitlines()
+    # three distinct counter series with the right values
+    samples = {ln.split()[0]: ln.split()[1] for ln in lines
+               if ln and not ln.startswith("#") and "{" not in ln}
+    counter_vals = sorted(int(v) for n, v in samples.items()
+                          if n.startswith("repro_serve") and
+                          n.endswith("_total"))
+    assert counter_vals == [1, 2, 4]
+    assert len({n for n in samples if n.startswith("repro_serve")}) == 3
+    gauge_vals = sorted(int(v) for n, v in samples.items()
+                        if n.startswith("repro_pool"))
+    assert gauge_vals == [7, 9]
+    # HELP maps each exported name back to the un-sanitized original
+    helps = {ln.split()[2]: ln.split(None, 3)[3] for ln in lines
+             if ln.startswith("# HELP")}
+    assert set(helps.values()) >= {"serve/steps", "serve_steps",
+                                   "serve-steps", "pool/free", "pool_free"}
+    assert len(helps) == len(set(helps))         # exported names unique
+    # first-seen (sorted order) keeps the clean name; suffixes count up
+    assert helps["repro_serve_steps_total"] in ("serve/steps",
+                                                "serve-steps")
+    assert any(n.startswith("repro_serve_steps_2") for n in helps)
+
+
+def test_trace_buffer_is_bounded_ring():
+    """A long-lived server must not leak host memory through the trace:
+    each event kind is a bounded ring that drops the OLDEST events and
+    counts the drops."""
+    from repro.obs.trace import TraceBuffer
+    buf = TraceBuffer(capacity=8)
+    for i in range(20):
+        buf.add_phase(i, "step", float(i), float(i) + 0.5)
+        buf.add_span(i, "submit", float(i))
+        buf.add_counter("pool", {"free": float(i)}, t=float(i))
+    assert len(buf.phases) == 8 and len(buf.spans) == 8
+    assert len(buf.counters) == 8
+    assert buf.dropped_events == 3 * 12          # oldest 12 of each kind
+    assert buf.phases[0].step == 12              # most recent window kept
+    assert buf.phases[-1].step == 19
+    buf.clear()
+    assert buf.dropped_events == 0 and not buf.phases
+    # default capacity is big enough that normal runs never drop
+    assert TraceBuffer().capacity == 65536
+
+
 # ---------------------------------------------------------------------------
 # Byte parity: telemetry must not perturb outputs
 # ---------------------------------------------------------------------------
@@ -249,13 +306,19 @@ def test_ttft_correct_under_manual_step_driving(key):
         assert recs[r].ttft_s >= gap
         assert recs[r].ttft_s <= gap + wall + 0.5
         assert recs[r].tpot_s >= 0.0
-    # records are stable: a second read reports the same latencies, and
-    # run() on the drained engine reports no new finishes
+    # records are stable: finished() is non-destructive, so a second
+    # read reports the same latencies; run() on the NOT-yet-drained
+    # engine reports them too (manual-step finishes drain through the
+    # next run(), same as requests cancelled between runs), and after
+    # that destructive drain nothing reports again
     recs2 = eng.finished()
     assert {r: recs2[r].ttft_s for r in recs2} == \
            {r: recs[r].ttft_s for r in recs}
     out, _ = eng.run()
-    assert out == {}
+    assert sorted(out) == sorted(rids)
+    assert eng.run()[0] == {}                     # nothing left to drain
+    eng.pop_finished()
+    assert eng.finished() == {}                   # history fully retired
 
 
 def test_run_stats_keys_backward_compatible(key):

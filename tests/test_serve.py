@@ -400,6 +400,31 @@ def test_engine_reset_reuses_compiled_step(key):
         assert rid == 0                             # rid counter reset too
 
 
+def test_engine_rejects_degenerate_requests(key):
+    """Degenerate requests must fail fast at add_request with no engine
+    state left behind — not hang admission or crash mid-run."""
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    m = build(cfg)
+    params = m.init(key)
+    eng = Engine(m, params, ServeConfig(max_seqs=2, block_size=4,
+                                        max_len=16))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.add_request([], max_new_tokens=4)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.add_request([1, 2], max_new_tokens=0)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.add_request([1, 2], max_new_tokens=-3)
+    with pytest.raises(ValueError, match="capacity"):
+        eng.add_request(list(range(14)), max_new_tokens=4)  # 18 > 16
+    # rejected requests left nothing behind: queue empty, rids unburned,
+    # run() is a clean no-op
+    assert not eng.scheduler.has_work
+    assert not eng._submit_wall
+    out, _ = eng.run()
+    assert out == {}
+    assert eng.add_request([1, 2], max_new_tokens=4) == 0
+
+
 def test_engine_serves_pruned_model(key):
     """The SPA-pruned model runs the same engine path (paper's core claim)."""
     from repro.core.pruner import prune_model

@@ -107,6 +107,43 @@ def test_spec_survives_preemption(key):
         assert r.tokens == list(ref[len(p):])
 
 
+def test_spec_stop_token_mid_accepted_window(key):
+    """A stop token landing *inside* an accepted draft window must end
+    the request there: tokens after the stop in the same window are
+    discarded (regression for _fold_spec truncation), matching the
+    sequential oracle cut at the first stop."""
+    m, params = _build("tinyllama-1.1b", key)
+    V = m.cfg.vocab_size
+    P, GEN = 11, 8
+    prompt = [int(t) for t in jax.random.randint(
+        jax.random.PRNGKey(53), (P,), 0, V)]
+    ref = np.asarray(generate(m, params,
+                              jnp.asarray(prompt, jnp.int32)[None], GEN))[0]
+    # self-draft -> full acceptance: the first cycle appends K+1 tokens
+    # in one fold, so stopping on the SECOND generated token exercises
+    # the mid-window truncation path
+    stop = int(ref[P + 1])
+    eng = Engine(m, params, ServeConfig(max_seqs=2, block_size=4,
+                                        max_len=32, chunk_size=4,
+                                        spec_k=4),
+                 draft_model=m, draft_params=params)
+    assert eng.spec_active
+    rid = eng.add_request(prompt, max_new_tokens=GEN, stop_tokens=(stop,))
+    out, stats = eng.run()
+    eng.cache_host.check()
+    assert stats["spec_cycles"] >= 1
+    assert stats["spec_accepted"] >= 2           # window actually covered it
+    assert out[rid].tokens == list(ref[P:P + 2])  # cut at first stop
+    assert out[rid].tokens[-1] == stop
+    assert out[rid].finish_reason == "stop"
+    # the pool cursor rolled back past the discarded tail: a fresh
+    # request reuses the slot cleanly
+    r2 = eng.add_request(prompt, max_new_tokens=GEN)
+    out2, _ = eng.run()
+    eng.cache_host.check()
+    assert out2[r2].tokens == list(ref[P:])
+
+
 def test_spec_with_prefix_caching_and_cow(key):
     """A full-cover prefix hit (COW on the boundary block) composes with
     speculative append/rollback: parity holds on both pools."""
