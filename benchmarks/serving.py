@@ -47,6 +47,15 @@ request-lifecycle telemetry, writes ``results/serving_latency.json``
 and a Perfetto-loadable Chrome trace of the run
 (``results/serving_trace.json``; both CI artifacts).
 
+With ``--fault-rate R``, the chaos A/B section runs (DESIGN.md §14): the
+same closed-loop request set is served fault-free and then under a
+seeded schedule of recoverable faults (slow steps, transient sync
+errors, allocator pressure holds) firing at rate R per opportunity,
+with per-step invariant auditing on.  Outputs must stay byte-identical
+— the A/B isolates the goodput and p99-TTFT cost of recovery —
+and ``results/serving_chaos.json`` (+ an optional Chrome trace via
+``--trace-out``) is uploaded as a CI artifact.
+
 With ``--sharded``, the mesh-aware serving section runs (DESIGN.md §10):
 for N in {1, 2, 4} a subprocess is forced to N host-platform devices
 (``XLA_FLAGS=--xla_force_host_platform_device_count=N``; the device count
@@ -728,6 +737,122 @@ def latency_rows(rate: float, out_path: str | None = None,
 
 
 # ---------------------------------------------------------------------------
+# Chaos A/B (--fault-rate): goodput + tail latency under injected faults
+# ---------------------------------------------------------------------------
+
+CHAOS_PROMPT, CHAOS_GEN, CHAOS_NREQ = 24, 16, 16
+
+
+def chaos_rows(rate: float, out_path: str | None = None,
+               trace_path: str | None = None) -> list[str]:
+    """Fault-injection A/B (DESIGN.md §14): the same closed-loop request
+    set served twice on one engine — fault-free, then under a seeded
+    schedule of slow steps, transient sync errors, and allocator
+    pressure holds, each firing at ``rate`` per opportunity.  Reports
+    goodput (completed tokens/s) and p99 TTFT for both sides.
+
+    The injected kinds are all *recoverable* in lockstep driving (sync
+    aborts redo the step, holds expire, slow steps just stall), so the
+    faulted run must still complete every request **byte-identically**
+    — the A/B isolates the latency/goodput cost of recovery, and the
+    run double-checks zero leaked blocks and a clean conservation audit
+    with per-step invariant auditing enabled."""
+    from repro.obs import Telemetry, write_chrome
+    from repro.serve import Fault, FaultInjector
+
+    cfg = bench_cfg()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    prompts = [[int(t) for t in rng.integers(0, cfg.vocab_size,
+                                             CHAOS_PROMPT - 4 * (i % 3))]
+               for i in range(CHAOS_NREQ)]
+
+    eng = Engine(model, params, ServeConfig(
+        max_seqs=8, block_size=16, max_len=CHAOS_PROMPT + CHAOS_GEN,
+        chunk_size=16, audit_level="full"))
+
+    def drive(faults, tel):
+        eng.obs = tel
+        eng.reset()
+        eng.faults = faults
+        for p in prompts:
+            eng.add_request(p, max_new_tokens=CHAOS_GEN)
+        t0 = time.perf_counter()
+        n = 0
+        while eng.scheduler.has_work or eng.pending_step:
+            eng.step()
+            n += 1
+            assert n <= 4000, "chaos bench deadlocked"
+        dt = time.perf_counter() - t0
+        eng.faults = None
+        a = eng.cache_host.allocator
+        assert a.num_live == 0 and a.num_held == 0, "leaked blocks"
+        eng.cache_host.check()
+        recs = eng.finished()
+        done = [r for r in recs.values() if r.finish_reason == "length"]
+        return {
+            "goodput_tok_per_s":
+                sum(len(r.tokens) for r in done) / max(dt, 1e-9),
+            "completed": len(done),
+            "failed": len(recs) - len(done),
+            "ttft_s": _percentiles([r.ttft_s for r in recs.values()
+                                    if r.ttft_s > 0]),
+            "makespan_s": dt,
+            "counters": tel.registry.counter_values(),
+        }, {r: (tuple(recs[r].tokens), recs[r].finish_reason)
+            for r in recs}
+
+    drive(None, Telemetry(enabled=False))       # compile
+    base, ref_out = drive(None, Telemetry(enabled=True))
+
+    fi = FaultInjector([
+        Fault("slow_step", rate=rate, times=10 ** 6, delay_s=0.005),
+        Fault("sync_error", rate=rate, times=10 ** 6),
+        Fault("alloc_hold", rate=rate, times=10 ** 6, hold_steps=2),
+    ], seed=0)
+    tel = Telemetry(enabled=True)
+    chaos, chaos_out = drive(fi, tel)
+    fired = dict(fi.fired)
+
+    assert chaos_out == ref_out, \
+        "recoverable faults changed outputs (lockstep must redo)"
+    assert sum(fired.values()) > 0 or rate == 0.0, \
+        f"fault rate {rate} never fired"
+
+    degr = base["goodput_tok_per_s"] / max(chaos["goodput_tok_per_s"], 1e-9)
+    rows = [
+        f"serving_chaos_goodput_clean,"
+        f"{1e6 / max(base['goodput_tok_per_s'], 1e-9):.1f},"
+        f"{base['goodput_tok_per_s']:.1f} tok/s fault-free "
+        f"({base['completed']}/{CHAOS_NREQ} completed)",
+        f"serving_chaos_goodput,"
+        f"{1e6 / max(chaos['goodput_tok_per_s'], 1e-9):.1f},"
+        f"{chaos['goodput_tok_per_s']:.1f} tok/s at fault rate {rate:g} "
+        f"({chaos['completed']}/{CHAOS_NREQ} completed, "
+        f"{degr:.2f}x slower, byte-identical)",
+        f"serving_chaos_ttft_p99,{chaos['ttft_s']['p99'] * 1e6:.0f},"
+        f"{chaos['ttft_s']['p99'] * 1e3:.1f}ms TTFT p99 under faults "
+        f"(vs {base['ttft_s']['p99'] * 1e3:.1f}ms clean)",
+        f"serving_chaos_faults,{sum(fired.values())},"
+        f"faults fired {fired} recoveries="
+        f"{chaos['counters'].get('serve/recoveries', 0):.0f}",
+    ]
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump({"rows": rows, "fault_rate": rate,
+                       "requests": CHAOS_NREQ, "gen": CHAOS_GEN,
+                       "fired": fired, "clean": base, "faulted": chaos,
+                       "goodput_degradation": degr,
+                       "byte_identical": True}, f, indent=1)
+    if trace_path:
+        os.makedirs(os.path.dirname(trace_path) or ".", exist_ok=True)
+        write_chrome(tel.trace, trace_path)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Sharded serving (--sharded): data-parallel slots, byte-identical outputs
 # ---------------------------------------------------------------------------
 
@@ -894,6 +1019,10 @@ if __name__ == "__main__":
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="run the open-loop Poisson latency section at "
                          "this many req/s (TTFT/TPOT p50+p99)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="run the chaos A/B section: goodput + p99 TTFT "
+                         "fault-free vs a seeded fault schedule firing "
+                         "at this per-opportunity rate")
     ap.add_argument("--sharded-worker", default=None, metavar="DxM",
                     help=argparse.SUPPRESS)   # internal subprocess mode
     ap.add_argument("--out", default=None,
@@ -911,6 +1040,9 @@ if __name__ == "__main__":
                 else sharded_rows(args.out) if args.sharded
                 else quant_rows(args.cache_dtype, args.out)
                 if args.cache_dtype
+                else chaos_rows(args.fault_rate, args.out,
+                                args.trace_out)
+                if args.fault_rate
                 else latency_rows(args.arrival_rate, args.out,
                                   args.trace_out)
                 if args.arrival_rate else run())

@@ -35,12 +35,24 @@ dump — and ``--trace-out PATH`` writes a Chrome-trace JSON of the run
 occupancy as counter tracks) loadable in https://ui.perfetto.dev or
 chrome://tracing (repro.obs; DESIGN.md §12).
 
+``--audit-level {off,alloc,full}`` turns on runtime invariant auditing
+(allocator / full cache conservation checked every ``--audit-interval``
+steps, with quarantine-and-recover on violation) and ``--degrade``
+enables the load-shedding ladder — both from DESIGN.md §14.
+
+On SIGTERM/SIGINT the server drains gracefully: it stops admitting,
+finishes in-flight requests, and — with ``--snapshot-out PATH`` — writes
+an engine snapshot whose waiting queue a fresh process can resume
+byte-identically via ``--restore PATH`` (which rebuilds the engine from
+the snapshot's own ServeConfig; CLI engine flags are ignored).
+
 ``generate`` (sequential, token-by-token) is kept as the correctness
 oracle the engine is tested against (tests/test_serve.py).
 """
 from __future__ import annotations
 
 import argparse
+import signal
 import time
 
 import jax
@@ -89,7 +101,10 @@ def build_engine(cfg, model, params, args, draft_model=None,
         prefix_caching=not args.no_prefix_caching,
         spec_k=args.spec_k, spec_ema=args.spec_ema,
         draft_cache_dtype=args.draft_cache_dtype,
-        cache_dtype=args.cache_dtype, async_step=args.async_step),
+        cache_dtype=args.cache_dtype, async_step=args.async_step,
+        audit_level=getattr(args, "audit_level", "off"),
+        audit_interval=getattr(args, "audit_interval", 1),
+        degrade=getattr(args, "degrade", False)),
         draft_model=draft_model, draft_params=draft_params, mesh=mesh,
         telemetry=telemetry)
 
@@ -145,6 +160,24 @@ def main():
     ap.add_argument("--trace-out", default="",
                     help="write a Chrome-trace JSON of the run "
                          "(load in https://ui.perfetto.dev)")
+    ap.add_argument("--audit-level", default="off",
+                    choices=("off", "alloc", "full"),
+                    help="runtime invariant auditing after each step "
+                         "(alloc: allocator conservation; full: cache "
+                         "tables + prefix index too; DESIGN.md §14)")
+    ap.add_argument("--audit-interval", type=int, default=1,
+                    help="audit every N steps (amortizes full audits)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="graceful degradation under pool pressure: "
+                         "shed aged waiting requests, clamp spec K, "
+                         "pause prefix-cache admission")
+    ap.add_argument("--snapshot-out", default="",
+                    help="write an engine snapshot here after a "
+                         "SIGTERM/SIGINT drain (resume via --restore)")
+    ap.add_argument("--restore", default="",
+                    help="restore engine state from a snapshot file and "
+                         "resume its waiting queue (engine flags come "
+                         "from the snapshot, not the CLI)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -186,8 +219,21 @@ def main():
     if args.metrics or args.trace_out:
         from repro.obs import Telemetry
         telemetry = Telemetry(enabled=True)
-    engine = build_engine(cfg, model, params, args, draft_model,
-                          draft_params, telemetry=telemetry)
+    if args.restore:
+        from repro.launch.mesh import parse_mesh
+        from repro.serve import load_snapshot, restore_engine
+        snap = load_snapshot(args.restore)
+        engine = restore_engine(
+            snap, model, params, draft_model=draft_model,
+            draft_params=draft_params,
+            mesh=parse_mesh(args.mesh) if args.mesh else None,
+            telemetry=telemetry)
+        print(f"restored snapshot {args.restore}: "
+              f"{len(engine.scheduler.waiting)} waiting / "
+              f"{len(engine.scheduler.running)} running requests")
+    else:
+        engine = build_engine(cfg, model, params, args, draft_model,
+                              draft_params, telemetry=telemetry)
     if engine.mesh is not None:
         print(f"serving mesh: "
               f"{dict(zip(engine.mesh.axis_names, engine.mesh.devices.shape))}"
@@ -196,16 +242,40 @@ def main():
     if args.spec_k > 0 and not engine.spec_active:
         print("speculative decoding gated off for this family "
               "(recurrent state cannot be rewound; DESIGN.md §9)")
+    # graceful shutdown: a signal flips the flag; run() notices between
+    # steps, then we drain (finish in-flight, refuse admissions) and
+    # optionally snapshot — the handler itself does no engine work, so a
+    # signal mid-step is safe
+    stop: dict[str, int] = {}
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda signum, frame: stop.setdefault(
+            "sig", signum))
+
     t0 = time.time()
-    for i in range(args.requests):
-        engine.add_request([int(t) for t in toks[i, :lens[i]]],
-                           max_new_tokens=args.gen,
-                           temperature=args.temperature)
-    out, stats = engine.run()
+    if not args.restore:
+        for i in range(args.requests):
+            engine.add_request([int(t) for t in toks[i, :lens[i]]],
+                               max_new_tokens=args.gen,
+                               temperature=args.temperature)
+    print("engine ready", flush=True)    # subprocess tests wait for this
+    out, stats = engine.run(stop_when=lambda: "sig" in stop)
+    if "sig" in stop:
+        print(f"signal {stop['sig']}: draining "
+              f"({len(engine.scheduler.running)} in flight, "
+              f"{len(engine.scheduler.waiting)} waiting)", flush=True)
+        out.update(engine.drain())
+        if args.snapshot_out:
+            from repro.serve import save_snapshot
+            save_snapshot(engine, args.snapshot_out)
+            print(f"snapshot -> {args.snapshot_out} "
+                  f"({len(engine.scheduler.waiting)} waiting requests "
+                  f"resumable via --restore)", flush=True)
     dt = time.time() - t0
     n_new = sum(len(r.tokens) for r in out.values())
     print(f"served {len(out)} requests / {n_new} new tokens in {dt:.2f}s "
           f"(incl. compile)")
+    if not out:
+        return
     print(f"decode {stats['decode_tok_per_s']:.1f} tok/s | "
           f"prefill+decode {stats['total_tok_per_s']:.1f} tok/s | "
           f"{stats['steps']:.0f} steps | "
@@ -220,6 +290,11 @@ def main():
         print(f"speculative: {stats['spec_cycles']:.0f} cycles | "
               f"acceptance {stats['spec_acceptance']:.1%} "
               f"({stats['spec_accepted']:.0f}/{stats['spec_proposed']:.0f})")
+    rb = ("faults_injected", "recoveries", "requests_shed",
+          "audit_violations", "callback_errors")
+    if any(stats.get(k) for k in rb):
+        print("robustness: " + " | ".join(
+            f"{k} {stats[k]:.0f}" for k in rb if stats.get(k)))
     first = out[min(out)]
     print("sample token ids:", first.tokens[:16])
 

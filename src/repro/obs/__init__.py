@@ -80,12 +80,14 @@ class Telemetry:
             return NULL_CTX
         return _PhaseTimer(self, name, step)
 
-    def event(self, kind: str, rid: int) -> None:
+    def event(self, kind: str, rid: int, **meta) -> None:
         """One request-lifecycle point (submit/admit/first_chunk/
-        first_token/preempt/resume/finish)."""
+        first_token/preempt/resume/finish).  ``meta`` rides on the trace
+        span — finish events carry their terminal ``reason`` so traces
+        distinguish shed / deadline / cancelled / completed."""
         if not self.enabled:
             return
-        self.trace.add_span(rid, kind)
+        self.trace.add_span(rid, kind, **meta)
         self.registry.counter("lifecycle/" + kind).inc()
 
     def sample(self, name: str, values: dict[str, float]) -> None:

@@ -42,6 +42,11 @@ class SpanEvent:
     rid: int
     kind: str
     t: float
+    # extra key/value metadata, stored as a sorted tuple of pairs so the
+    # event stays hashable/frozen; "finish" spans carry the terminal
+    # reason here (shed vs deadline vs cancelled vs completed — the
+    # trace must distinguish them, DESIGN.md §14)
+    meta: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,9 +93,11 @@ class TraceBuffer:
     def add_phase(self, step: int, name: str, t0: float, t1: float) -> None:
         self._push(self.phases, PhaseEvent(step, name, t0, t1))
 
-    def add_span(self, rid: int, kind: str, t: float | None = None) -> None:
+    def add_span(self, rid: int, kind: str, t: float | None = None,
+                 **meta) -> None:
         self._push(self.spans,
-                   SpanEvent(rid, kind, self.clock() if t is None else t))
+                   SpanEvent(rid, kind, self.clock() if t is None else t,
+                             tuple(sorted(meta.items()))))
 
     def add_counter(self, name: str, values: dict[str, float],
                     t: float | None = None) -> None:
@@ -136,7 +143,7 @@ def to_chrome(buf: TraceBuffer) -> dict:
             open_spans.discard(s.rid)
         ev.append({"ph": ph, "pid": 0, "cat": "request",
                    "id": s.rid, "name": f"req {s.rid}", "ts": us(s.t),
-                   "args": {"kind": s.kind}})
+                   "args": {"kind": s.kind, **dict(s.meta)}})
     for rid in sorted(open_spans):                # close dangling spans
         ev.append({"ph": "e", "pid": 0, "cat": "request", "id": rid,
                    "name": f"req {rid}", "ts": us(last_t),

@@ -1,9 +1,16 @@
-from repro.serve.engine import (Engine, EngineOverloaded, FinishedRequest,
-                                ServeConfig)
+from repro.serve.engine import (AuditViolation, Engine, EngineOverloaded,
+                                FinishedRequest, ServeConfig)
+from repro.serve.faults import (CrashError, Fault, FaultError,
+                                FaultInjector)
 from repro.serve.kv_cache import BlockAllocator, OutOfBlocks, PagedCache
 from repro.serve.scheduler import (FCFSScheduler, Request, RequestState,
                                    StepPlan)
+from repro.serve.snapshot import (load as load_snapshot, restore_engine,
+                                  restore_into, save_snapshot)
 
 __all__ = ["Engine", "EngineOverloaded", "FinishedRequest", "ServeConfig",
-           "BlockAllocator", "OutOfBlocks", "PagedCache", "FCFSScheduler",
-           "Request", "RequestState", "StepPlan"]
+           "AuditViolation", "Fault", "FaultInjector", "FaultError",
+           "CrashError", "BlockAllocator", "OutOfBlocks", "PagedCache",
+           "FCFSScheduler", "Request", "RequestState", "StepPlan",
+           "save_snapshot", "load_snapshot", "restore_into",
+           "restore_engine"]

@@ -96,7 +96,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.distributed.sharding import tree_shardings, use_rules
 from repro.kernels.paged_attention import CACHE_DTYPES, is_quantized
 from repro.obs import DEFAULT_TIME_BUCKETS, NULL_CTX, Telemetry
-from repro.serve.kv_cache import PagedCache
+from repro.serve.faults import CrashError, FaultError, FaultInjector
+from repro.serve.kv_cache import OutOfBlocks, PagedCache
 from repro.serve.scheduler import FCFSScheduler, Request, RequestState
 
 # engine run counters, registry-backed (repro.obs): the keys double as
@@ -104,7 +105,10 @@ from repro.serve.scheduler import FCFSScheduler, Request, RequestState
 # of two registry snapshots instead of hand-rolled `x0` locals
 _RUN_COUNTERS = ("steps", "decode_tokens", "prefill_tokens",
                  "prefill_chunks", "cow_copies", "host_syncs",
-                 "spec_cycles", "spec_proposed", "spec_accepted")
+                 "spec_cycles", "spec_proposed", "spec_accepted",
+                 # fault-tolerance layer (DESIGN.md §14)
+                 "faults_injected", "recoveries", "requests_shed",
+                 "audit_violations", "callback_errors")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +149,27 @@ class ServeConfig:
     max_waiting: int = 0              # backpressure: add_request raises
                                       # EngineOverloaded once this many
                                       # requests wait (0 = unbounded)
+    audit_level: str = "off"          # runtime invariant auditing
+                                      # (DESIGN.md §14): "off" | "alloc"
+                                      # (allocator conservation) | "full"
+                                      # (the PagedCache.check() oracle);
+                                      # a violation quarantines into the
+                                      # recover path instead of serving
+                                      # from corrupt state
+    audit_interval: int = 1           # audit every N engine steps
+    degrade: bool = False             # graceful-degradation ladder under
+                                      # sustained pool pressure: shed
+                                      # aged waiting requests, clamp
+                                      # speculative K to 1, pause
+                                      # prefix-cache admission
+    shed_queue_age_s: float = 0.5     # degraded: shed waiting requests
+                                      # older than this (finish_reason
+                                      # "shed" — a retriable rejection)
+    pressure_threshold: float = 0.125 # pressured when available blocks
+                                      # fall below this pool fraction
+                                      # (or the waiting queue is full)
+    pressure_window: int = 3          # consecutive pressured (calm)
+                                      # steps to engage (disengage)
 
     @property
     def blocks_per_seq(self) -> int:
@@ -159,8 +184,17 @@ class ServeConfig:
 
 class EngineOverloaded(RuntimeError):
     """Backpressure-aware admission (ServeConfig.max_waiting): the
-    waiting queue is full, so ``add_request`` refuses instead of growing
-    host state without bound.  Callers shed load or retry later."""
+    waiting queue is full (or the engine is draining), so ``add_request``
+    refuses instead of growing host state without bound.  Callers shed
+    load or retry later."""
+
+
+class AuditViolation(RuntimeError):
+    """A runtime invariant audit (ServeConfig.audit_level) failed AND the
+    recovery rebuild could not restore a consistent state — the engine
+    refuses to keep serving from memory it cannot trust.  The recoverable
+    case never raises: it is counted (``audit_violations``,
+    ``recoveries``) and serving continues (DESIGN.md §14)."""
 
 
 @dataclasses.dataclass
@@ -178,7 +212,9 @@ class FinishedRequest:
                                       # first token (0 for 1-token requests)
     spec_proposed: int = 0            # draft tokens offered to verification
     spec_accepted: int = 0            # draft tokens the target accepted
-    finish_reason: str = "length"     # stop | length | cancelled | deadline
+    finish_reason: str = "length"     # stop | length | cancelled |
+                                      # deadline | shed (load shedding) |
+                                      # error (callback raise / fault)
 
 
 @dataclasses.dataclass
@@ -210,9 +246,15 @@ class _Inflight:
 
 
 class Engine:
+    # extra host-sync attempts before a step is aborted (DESIGN.md §14):
+    # the fetched device arrays stay alive across attempts, so a retried
+    # fetch is byte-identical to the one that failed
+    _sync_retries = 2
+
     def __init__(self, model, params, cfg: ServeConfig | None = None,
                  draft_model=None, draft_params=None, mesh=None,
-                 telemetry: Telemetry | None = None):
+                 telemetry: Telemetry | None = None,
+                 faults: FaultInjector | None = None):
         if not model.cfg.has_decode:
             raise ValueError(f"{model.cfg.name} has no decode path")
         if model.cfg.family == "vlm":
@@ -220,6 +262,15 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg or ServeConfig()
+        # fault injection (repro.serve.faults; DESIGN.md §14): None keeps
+        # every hook behind one attribute check.  A plain attribute, not
+        # reset() state, so tests can attach/detach an injector mid-life.
+        self.faults = faults
+        if self.cfg.audit_level not in ("off", "alloc", "full"):
+            raise ValueError(f"audit_level {self.cfg.audit_level!r} "
+                             f"not in ('off', 'alloc', 'full')")
+        if self.cfg.audit_interval < 1:
+            raise ValueError("audit_interval must be >= 1")
         # --- observability (repro.obs; DESIGN.md §12) ---------------------
         # Host-side only: phase timers, lifecycle spans and pool gauges
         # never touch the jitted paths, the device arrays, or the RNG, so
@@ -492,6 +543,13 @@ class Engine:
         self._on_token: dict[int, Any] = {}    # rid -> streaming callback
         self._deadline: dict[int, float] = {}  # rid -> absolute wall time
         self._drained = 0    # scheduler.finished entries already reported
+        # fault-tolerance / degradation state (DESIGN.md §14)
+        self._tick = 0                  # monotonic hook tick: hold expiry
+        self._fault_held: list[tuple[int, list[int]]] = []
+        self._draining = False          # drain(): no new admissions
+        self._degraded = False          # degradation ladder engaged
+        self._pressure_run = 0
+        self._calm_run = 0
 
     # back-compat accessors: these were plain attributes before the
     # registry existed and are still read by tests/benchmarks
@@ -667,6 +725,9 @@ class Engine:
         wait (backpressure), ValueError on degenerate requests (empty
         prompt, non-positive max_new_tokens, prompt+budget beyond
         capacity)."""
+        if self._draining:
+            raise EngineOverloaded(
+                "engine is draining; retry on another instance")
         if self.cfg.max_waiting and \
                 len(self.scheduler.waiting) >= self.cfg.max_waiting:
             raise EngineOverloaded(
@@ -709,10 +770,8 @@ class Engine:
         s.finish_reason = reason
         rid = s.req.rid
         self._finish_step[rid] = self._steps
-        self.obs.event("finish", rid)
-        cb = self._on_token.pop(rid, None)
-        if cb is not None:
-            cb(None, True)
+        self.obs.event("finish", rid, reason=reason)
+        self._emit_cb(s, None, True)
 
     def _expire_deadlines(self) -> None:
         if not self._deadline:
@@ -778,17 +837,48 @@ class Engine:
             if not s.finish_reason:
                 s.finish_reason = "length"
             self._finish_step[rid] = self._steps + 1
-            self.obs.event("finish", rid)
+            self.obs.event("finish", rid, reason=s.finish_reason)
+        self._emit_cb(s, tok, s.done)
+
+    def _emit_cb(self, s: RequestState, tok: int | None, done: bool
+                 ) -> None:
+        """Deliver one streaming callback, hardened: user code that
+        raises cancels only its own request (finish_reason "error",
+        counted in ``callback_errors``) — it can never unwind the step
+        fold or poison async reconciliation.  The caller's ordinary
+        ``if s.done: _cancel_inflight`` path then rolls back any row
+        already dispatched for the request."""
+        rid = s.req.rid
         cb = self._on_token.get(rid)
-        if cb is not None:
-            cb(tok, s.done)
-            if s.done:
-                del self._on_token[rid]
+        if cb is None:
+            return
+        if done:
+            del self._on_token[rid]
+        try:
+            if self.faults is not None and \
+                    self.faults.fire("callback_error", self._steps,
+                                     rid=rid) is not None:
+                self._c["faults_injected"].inc()
+                raise FaultError(f"injected on_token exception (rid {rid})")
+            cb(tok, done)
+        except Exception:
+            self._c["callback_errors"].inc()
+            self._on_token.pop(rid, None)
+            if not done:            # _finish_early re-enters _emit_cb,
+                self._finish_early(s, "error")   # cb is already popped
+                try:
+                    cb(None, True)  # best-effort end-of-stream notice so
+                except Exception:   # a consumer blocked on the stream
+                    pass            # still observes termination
 
     def _fetch(self, tree):
         """The step's single device->host synchronization point: one
         batched transfer of every value the host needs this step."""
         self._c["host_syncs"].inc()
+        if self.faults is not None and \
+                self.faults.fire("sync_error", self._steps) is not None:
+            self._c["faults_injected"].inc()
+            raise FaultError("injected device-sync error")
         return jax.device_get(tree)
 
     def _phase(self, name: str):
@@ -827,8 +917,9 @@ class Engine:
         a = self.cache_host.allocator
         self.obs.sample("pool", {
             "free": a.num_free, "live": a.num_live, "cached": a.num_cached,
-            "evictions": a.total_evictions,
-            "cow_copies": self._cow_copies})
+            "held": a.num_held, "evictions": a.total_evictions,
+            "cow_copies": self._cow_copies,
+            "degraded": 1.0 if self._degraded else 0.0})
         c = self.cache_host
         if c.prefix_caching:
             self.obs.sample("prefix", {
@@ -853,13 +944,21 @@ class Engine:
         driving stays safe."""
         with self._trace_ctx():
             with self._phase("step"):
+                self._fault_tick()
                 self._expire_deadlines()
+                self._degrade_tick()
+                # audit BEFORE dispatch: corruption is caught before the
+                # next step's plan/kernels consume it, so recovery can
+                # still rebuild without a corrupt-table step having
+                # committed wrong tokens (DESIGN.md §14)
+                self._audit_maybe()
                 if self._pending is not None:
                     rec, self._pending = self._pending, None
                     self._reconcile(rec)
                 rec = self._submit_step()
                 if rec is not None:
                     self._reconcile(rec)
+                self._idle_release_holds()
             if self.obs.enabled:
                 self._sample_gauges()
             return rec.running if rec is not None else []
@@ -877,12 +976,16 @@ class Engine:
         with self._trace_ctx():
             with self._phase("step"):
                 out = self._step_async_host()
+                self._idle_release_holds()
             if self.obs.enabled:
                 self._sample_gauges()
             return out
 
     def _step_async_host(self) -> list[RequestState]:
+        self._fault_tick()
         self._expire_deadlines()
+        self._degrade_tick()
+        self._audit_maybe()             # pre-dispatch, as in step()
         prev, self._pending = self._pending, None
         if prev is not None and self._can_overlap(prev):
             # the overlap phase measures exactly the host work hidden
@@ -947,10 +1050,23 @@ class Engine:
         (async overlap), decode rows whose next token is still in flight
         read it straight from ``prev``'s device output arrays."""
         spec_k = self.cfg.spec_k if self.spec_active else 0
+        # degradation ladder: clamp the *planned* K to 1 under pressure
+        # (cheapest cycles, least speculative pool reservation); the
+        # compiled device shapes stay (B, cfg.spec_k) by construction
+        plan_spec_k = 1 if (spec_k > 1 and self._degraded) else spec_k
         with self._phase("plan"):
-            plan = self.scheduler.plan_step(self.cfg.chunk_size,
-                                            self.cfg.prefill_budget, spec_k,
-                                            self.cfg.spec_ema)
+            while True:
+                try:
+                    plan = self.scheduler.plan_step(
+                        self.cfg.chunk_size, self.cfg.prefill_budget,
+                        plan_spec_k, self.cfg.spec_ema,
+                        allow_admission=not self._draining)
+                    break
+                except OutOfBlocks:
+                    # a lone running request outgrew the pool — recover
+                    # instead of crashing the engine (DESIGN.md §14)
+                    if not self._unjam():
+                        raise
         self._note_transitions(plan)
         if prev is not None:
             # _can_overlap proved the pool could back every growth
@@ -1005,7 +1121,23 @@ class Engine:
         the step flew) cancels the request's row in the ``newer``
         in-flight record — the misprediction rollback."""
         with self._phase("sync"):             # the ONE device_get per step
-            vals = self._fetch(rec.fetch) if rec.fetch else {}
+            vals: dict | None = {}
+            if rec.fetch:
+                vals = None
+                for attempt in range(1 + self._sync_retries):
+                    try:
+                        vals = self._fetch(rec.fetch)
+                        break
+                    except FaultError:
+                        continue
+                if vals is not None and attempt:
+                    # transient sync failure, retried clean: the device
+                    # arrays are still alive, so the refetch reads the
+                    # identical values
+                    self._c["recoveries"].inc()
+        if vals is None:                      # persistent sync failure
+            self._abort_step(rec, newer)
+            return
 
         with self._phase("fold"):
             for s, slot in rec.pre_rows:
@@ -1063,6 +1195,261 @@ class Engine:
         rec.cancelled.add(rid)
         if s.slot >= 0:
             self.cache_host.truncate(s.slot, s.num_cached)
+
+    # ----- fault tolerance (DESIGN.md §14) -----
+    def _fault_tick(self) -> None:
+        """Per-step fault hook: release expired injected holds, then let
+        the injector fire the step-scoped kinds (crash / slow_step /
+        alloc_hold).  One list check + one attribute check when idle."""
+        self._tick += 1
+        if self._fault_held:
+            a = self.cache_host.allocator
+            keep = []
+            for rel, blocks in self._fault_held:
+                if self._tick >= rel:
+                    a.unhold(blocks)
+                else:
+                    keep.append((rel, blocks))
+            self._fault_held = keep
+        if self.faults is None:
+            return
+        f = self.faults.fire("crash", self._steps)
+        if f is not None:
+            self._c["faults_injected"].inc()
+            raise CrashError(f"injected crash at step {self._steps}")
+        f = self.faults.fire("slow_step", self._steps)
+        if f is not None:
+            self._c["faults_injected"].inc()
+            time.sleep(f.delay_s)
+        f = self.faults.fire("alloc_hold", self._steps)
+        if f is not None:
+            self._c["faults_injected"].inc()
+            a = self.cache_host.allocator
+            n = f.blocks or max(1, a.num_available // 2)
+            held = a.hold(n)
+            if held:
+                self._fault_held.append(
+                    (self._tick + max(1, f.hold_steps), held))
+
+    def _idle_release_holds(self) -> None:
+        """Injected holds simulate pool pressure DURING serving; when a
+        step leaves the engine idle (no work, nothing in flight) the
+        pressure is moot and outstanding holds are handed back — a hold
+        outliving the last request would read as a real block leak."""
+        if self._fault_held and not self.scheduler.has_work \
+                and self._pending is None:
+            a = self.cache_host.allocator
+            for _, blocks in self._fault_held:
+                a.unhold(blocks)
+            self._fault_held = []
+
+    def _abort_step(self, rec: _Inflight, newer: _Inflight | None) -> None:
+        """A step's host sync failed past every retry.  Recovery splits
+        on pipeline position:
+
+        - *lockstep* (not predict-folded): no host cursor moved and the
+          device KV writes are idempotent, so the step simply never
+          happened.  Sampled-prefill rows rewind their cursors to re-feed
+          the last prompt token; speculative reservations are handed
+          back.  The redone step is byte-identical at temperature 0
+          (greedy sampling is key-independent; at temperature > 0 the
+          redo legitimately re-draws).
+        - *folded* (async overlap): the next step already consumed this
+          step's device outputs, and the lost sample values cannot be
+          recovered — the rows that were waiting on them fail cleanly
+          (finish_reason "error", rolled out of the newer record), while
+          every non-emitting row keeps its deterministic growth."""
+        self._c["recoveries"].inc()
+        if not rec.folded:
+            for s, _, _ in rec.spec_meta:
+                if not s.done and s.slot >= 0:
+                    self.cache_host.truncate(s.slot, s.num_cached + 1)
+            for s, _ in rec.pre_rows:
+                if s.slot >= 0:
+                    s.num_cached = min(s.num_cached, s.seq_len - 1)
+                    s.draft_cached = min(s.draft_cached,
+                                         max(s.num_cached, 0))
+            return
+        for s, _ in rec.pre_rows:
+            if s.req.rid in rec.cancelled:
+                continue
+            s.pending -= 1
+            if not s.stopped:
+                self._finish_early(s, "error")
+            self._cancel_inflight(s, newer)
+        for s, _, emit in rec.decode_rows:
+            if s.req.rid in rec.cancelled or not emit:
+                continue
+            s.pending -= 1
+            if not s.stopped:
+                self._finish_early(s, "error")
+            self._cancel_inflight(s, newer)
+        self._c["steps"].inc()
+
+    def _audit_maybe(self) -> None:
+        """Runtime invariant auditing (ServeConfig.audit_level): run the
+        property-test conservation oracle as a production defense.  On a
+        violation, quarantine into the recover path instead of silently
+        serving from corrupt state.  "off" costs one string compare."""
+        lvl = self.cfg.audit_level
+        if lvl == "off":
+            return
+        if self._steps % self.cfg.audit_interval:
+            return
+        try:
+            with self._phase("audit"):
+                if lvl == "alloc":
+                    self.cache_host.allocator.check()
+                else:
+                    self.cache_host.check()
+        except AssertionError as e:
+            self._c["audit_violations"].inc()
+            try:
+                self._recover()
+            except AssertionError:
+                raise AuditViolation(
+                    f"invariant audit failed and recovery did not "
+                    f"converge: {e}") from e
+
+    def _recover(self) -> None:
+        """Quarantine-and-recover (DESIGN.md §14): rebuild every derived
+        host structure from the authoritative per-slot ownership, fail
+        the requests whose bookkeeping cannot be trusted, and resume.
+
+        The in-flight async step (if any) is discarded — its fetch
+        metadata may describe the corrupt state — and predicted growth
+        rolls back to known tokens; device KV for those positions is
+        rewritten idempotently when the requests re-plan."""
+        self._c["recoveries"].inc()
+        self._pending = None
+        cache, sched = self.cache_host, self.scheduler
+        for s in list(sched.running) + list(sched.waiting):
+            s.pending = 0
+        cache.rebuild()
+        seen: dict[int, RequestState] = {}
+        for s in sorted(list(sched.running), key=lambda r: r.req.rid):
+            dup = not (0 <= s.slot < cache.max_seqs) or s.slot in seen
+            if dup:
+                # an invalid or contested slot: the request's blocks are
+                # not distinguishable from its neighbor's — fail without
+                # releasing (the slot's owner keeps it)
+                self._fail_running(s, "error", release=False)
+                continue
+            seen[s.slot] = s
+            cap = len(cache._owned[s.slot]) * cache.block_size
+            tgt = max(0, min(s.num_cached, len(s.seq) - 1))
+            if tgt > cap:
+                # ownership cannot back the KV the cursor claims — the
+                # history is gone, fail cleanly and free what's left
+                self._fail_running(s, "error", release=True)
+                continue
+            s.num_cached = tgt
+            s.draft_cached = min(s.draft_cached, tgt)
+        # the free-slot stack is derived state too: recompute from the
+        # surviving running set (descending, preserving LIFO admission)
+        used = {s.slot for s in sched.running}
+        sched._free_slots = [sl for sl in range(cache.max_seqs - 1, -1, -1)
+                             if sl not in used]
+        cache.check()                   # recovery must converge
+
+    def _fail_running(self, s: RequestState, reason: str,
+                      release: bool = True) -> None:
+        """Fail one running request outside a scheduling round: finish
+        it, move it straight to the finished list, optionally release its
+        slot's blocks (recovery recomputes the free-slot stack itself)."""
+        self._finish_early(s, reason)
+        self.scheduler.running.remove(s)
+        self.scheduler.finished.append(s)
+        if release and 0 <= s.slot < self.cache_host.max_seqs:
+            self.cache_host.release(s.slot)
+        s.slot = -1
+
+    def _unjam(self) -> bool:
+        """``plan_step`` hit OutOfBlocks growing a lone running request.
+        Release emergency resources instead of crashing the engine:
+        injected holds go back first; failing that, the youngest running
+        request fails cleanly ("error").  Returns False when nothing is
+        left to give — the caller re-raises."""
+        self._c["recoveries"].inc()
+        if self._fault_held:
+            a = self.cache_host.allocator
+            for _, blocks in self._fault_held:
+                a.unhold(blocks)
+            self._fault_held = []
+            return True
+        live = [s for s in self.scheduler.running if not s.done]
+        if not live:
+            return False
+        victim = max(live, key=lambda s: s.req.rid)
+        self._finish_early(victim, "error")
+        return True
+
+    def _degrade_tick(self) -> None:
+        """Graceful degradation under sustained pool pressure (DESIGN.md
+        §14).  Pressure = available blocks below ``pressure_threshold``
+        of the pool, or a full waiting queue; ``pressure_window``
+        consecutive pressured (calm) steps engage (disengage) the
+        ladder: shed waiting requests older than ``shed_queue_age_s``
+        (finish_reason "shed" — a retriable rejection), clamp the
+        planned speculative K to 1, and pause prefix-cache admission."""
+        if not self.cfg.degrade:
+            return
+        a = self.cache_host.allocator
+        usable = max(a.num_blocks - 1, 1)
+        pressured = (a.num_available < self.cfg.pressure_threshold * usable
+                     or (self.cfg.max_waiting > 0 and
+                         len(self.scheduler.waiting) >=
+                         self.cfg.max_waiting))
+        if pressured:
+            self._pressure_run += 1
+            self._calm_run = 0
+        else:
+            self._calm_run += 1
+            self._pressure_run = 0
+        if not self._degraded and \
+                self._pressure_run >= self.cfg.pressure_window:
+            self._degraded = True
+        elif self._degraded and self._calm_run >= self.cfg.pressure_window:
+            self._degraded = False
+        self.cache_host.admission_paused = self._degraded
+        if self._degraded and self.cfg.shed_queue_age_s > 0 \
+                and self.scheduler.waiting:
+            now = time.time()
+            for s in [w for w in self.scheduler.waiting if not w.done]:
+                born = self._submit_wall.get(s.req.rid, now)
+                if now - born > self.cfg.shed_queue_age_s:
+                    self._c["requests_shed"].inc()
+                    self._finish_early(s, "shed")
+                    self.scheduler.drop_waiting(s)
+
+    def drain(self) -> dict[int, FinishedRequest]:
+        """Graceful shutdown: stop admitting waiting requests, run every
+        already-admitted request to completion (reconciling any in-flight
+        async step), and return the drained records.  Waiting requests
+        stay queued — a snapshot taken after ``drain()`` preserves them
+        for a restored engine to serve.  ``add_request`` raises
+        EngineOverloaded while draining; ``reset()`` clears the state."""
+        self._draining = True
+        step = self.step_async if self.cfg.async_step else self.step
+        while self.scheduler.running or self.pending_step:
+            step()
+        return self.pop_finished()
+
+    def snapshot(self):
+        """Serialize full host state + device pools (repro.serve.snapshot;
+        DESIGN.md §14).  Any in-flight async step is reconciled first so
+        the captured state has no pending tokens."""
+        from repro.serve import snapshot as _snap
+        if self._pending is not None:
+            rec, self._pending = self._pending, None
+            self._reconcile(rec)
+        return _snap.capture(self)
+
+    def restore(self, snap) -> None:
+        """Restore a snapshot produced by a config-identical engine; the
+        restored engine resumes byte-identically (DESIGN.md §14)."""
+        from repro.serve import snapshot as _snap
+        _snap.restore_into(self, snap)
 
     def _dispatch_decode(self, plan, spec_k, fetch, spec_meta, prev=None):
         """Build the fixed-shape decode batch and launch either the plain
@@ -1306,11 +1693,14 @@ class Engine:
         self._drained = 0
         return recs
 
-    def run(self, requests: Iterable[dict[str, Any]] | None = None
+    def run(self, requests: Iterable[dict[str, Any]] | None = None,
+            stop_when=None
             ) -> tuple[dict[int, FinishedRequest], dict[str, float]]:
         """Drive until the queue drains (``step_async`` pipeline when
         ``cfg.async_step``).  Returns ({rid: result}, stats); drained
-        requests' per-rid wall clocks are retired with their records."""
+        requests' per-rid wall clocks are retired with their records.
+        ``stop_when()`` (checked between steps) ends the drive early —
+        the signal-driven drain path in launch/serve.py uses it."""
         if requests:
             for r in requests:
                 self.add_request(**r)
@@ -1322,6 +1712,8 @@ class Engine:
         step = self.step_async if self.cfg.async_step else self.step
         t0 = time.time()
         while self.scheduler.has_work or self.pending_step:
+            if stop_when is not None and stop_when():
+                break
             step()
         dt = time.time() - t0
 
@@ -1350,5 +1742,10 @@ class Engine:
             "spec_accepted": acc,
             "spec_acceptance": acc / prop if prop else 0.0,
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "faults_injected": d["faults_injected"],
+            "recoveries": d["recoveries"],
+            "requests_shed": d["requests_shed"],
+            "audit_violations": d["audit_violations"],
+            "callback_errors": d["callback_errors"],
         }
         return out, stats

@@ -18,8 +18,9 @@ tests/test_serve_properties.py):
 Invariants:
   - block 0 is the reserved null block (idle slots write there) and is
     never allocated;
-  - ``free + live + cached`` partitions blocks ``1..N-1`` (pool
-    conservation — nothing leaks, nothing is double-owned);
+  - ``free + live + cached + held`` partitions blocks ``1..N-1`` (pool
+    conservation — nothing leaks, nothing is double-owned; *held* is
+    the fault-injection/reservation state, see ``hold``);
   - a live block's refcount equals the number of slot block tables that
     reference it (shared blocks come only from prefix hits);
   - cached blocks are exactly the ref==0 blocks still in the prefix
@@ -81,6 +82,11 @@ class BlockAllocator:
         self._free = list(range(num_blocks - 1, 0, -1))
         self._ref: dict[int, int] = {}
         self._cached: "OrderedDict[int, None]" = OrderedDict()
+        # fourth disjoint state: blocks sequestered by fault injection /
+        # capacity reservations — unavailable to alloc() but still
+        # accounted for, so the conservation oracle stays meaningful
+        # while the pool is under simulated pressure (DESIGN.md §14)
+        self._held: set[int] = set()
         # stats (benchmarks/serving.py, repro.obs pool gauges): fresh
         # allocations vs prefix reuse, and LRU evictions of cached blocks
         self.total_allocated = 0
@@ -106,6 +112,10 @@ class BlockAllocator:
     def num_available(self) -> int:
         """Blocks an alloc() can obtain: free plus evictable cached."""
         return len(self._free) + len(self._cached)
+
+    @property
+    def num_held(self) -> int:
+        return len(self._held)
 
     def ref(self, block: int) -> int:
         return self._ref.get(block, 0)
@@ -159,13 +169,43 @@ class BlockAllocator:
                 raise ValueError(f"freeing shared block {b} (ref>1)")
             self.decref(b)
 
+    def hold(self, n: int) -> list[int]:
+        """Sequester up to ``n`` available blocks (evicting cached ones
+        LRU-first like ``alloc``) into the held state: invisible to
+        ``alloc`` but still conserved.  The fault injector uses this to
+        simulate pool exhaustion without faking allocator state; returns
+        the blocks actually taken (pass them back to ``unhold``)."""
+        n = min(n, self.num_available)
+        while len(self._free) < n:            # reclaim cached, LRU first
+            b, _ = self._cached.popitem(last=False)
+            if self.on_evict is not None:
+                self.on_evict(b)
+            self._free.append(b)
+            self.total_evictions += 1
+        out = [self._free.pop() for _ in range(n)]
+        self._held.update(out)
+        return out
+
+    def unhold(self, blocks: list[int]) -> None:
+        """Return held blocks to the free list."""
+        for b in blocks:
+            if b not in self._held:
+                raise ValueError(f"unhold of non-held block {b}")
+            self._held.discard(b)
+            self._free.append(b)
+
     def check(self) -> None:
-        """Invariant: free + live + cached partition 1..N-1, 0 untouched."""
+        """Invariant: free + live + cached + held partition 1..N-1,
+        block 0 untouched."""
         free, live, cached = set(self._free), set(self._ref), set(self._cached)
-        assert 0 not in free and 0 not in live and 0 not in cached
+        held = self._held
+        assert 0 not in free and 0 not in live and 0 not in cached \
+            and 0 not in held
         assert len(free) == len(self._free)               # no dup in stack
         assert not (free & live) and not (free & cached) and not (live & cached)
-        assert len(free) + len(live) + len(cached) == self.num_blocks - 1
+        assert not held & (free | live | cached)
+        assert len(free) + len(live) + len(cached) + len(held) \
+            == self.num_blocks - 1
         assert all(r >= 1 for r in self._ref.values())
 
 
@@ -217,6 +257,10 @@ class PagedCache:
         # index probes at admission vs probes that aliased a block
         self.prefix_lookups = 0
         self.prefix_hits = 0
+        # degradation ladder (DESIGN.md §14): while paused, commit() stops
+        # registering new blocks in the prefix index, so released blocks
+        # return straight to the free list instead of lingering cached
+        self.admission_paused = False
 
     def shard_of(self, slot: int) -> int:
         return slot // (self.max_seqs // self.data_shards)
@@ -329,7 +373,7 @@ class PagedCache:
         """Register slot blocks that became full (``tokens`` = the written
         prefix so far) in the prefix index.  Duplicate content keeps the
         first registration (dedup happens at match time)."""
-        if not self.prefix_caching:
+        if not self.prefix_caching or self.admission_paused:
             return
         bs = self.block_size
         chain = self._chain[slot]
@@ -365,6 +409,42 @@ class PagedCache:
             self.tables[slot, bi] = new
             copies.append((b, new))
         return copies
+
+    # ----- recovery (DESIGN.md §14) -----
+    def rebuild(self) -> None:
+        """Recovery path for the runtime auditor: reconstruct every
+        derived structure from the authoritative per-slot ownership
+        lists (``_owned``), discarding whatever was corrupted.
+
+        Ownership is authoritative because it is what the engine's
+        dispatch actually reads (via ``tables``) and what ``release``
+        walks — if it is wrong the KV itself is unrecoverable and the
+        request must be failed (the engine checks per-slot capacity
+        after the rebuild).  Everything else is derived: refcounts are
+        the multiplicity of a block across slots, the free list is the
+        complement, and the prefix index is an optimization that is
+        *dropped wholesale* — a corrupt index would silently serve the
+        wrong KV, and an empty one merely costs future prefix hits.
+        Held blocks (fault injection) stay held."""
+        a = self.allocator
+        for slot, lst in enumerate(self._owned):
+            self._owned[slot] = [b for b in lst
+                                 if 0 < b < self.num_blocks]
+        owned_ct = Counter(b for lst in self._owned for b in lst)
+        a._ref = dict(owned_ct)
+        a._held -= set(owned_ct)             # ownership wins over holds
+        a._cached = OrderedDict()
+        a._free = [b for b in range(self.num_blocks - 1, 0, -1)
+                   if b not in owned_ct and b not in a._held]
+        self.tables[:] = 0
+        for slot, lst in enumerate(self._owned):
+            self.tables[slot, :len(lst)] = lst
+        self._block_of.clear()
+        self._hash_of.clear()
+        self._home_of.clear()
+        for slot in range(self.max_seqs):
+            self._chain[slot] = []
+        self.check()                         # recovery must converge
 
     # ----- invariant oracle (property tests) -----
     def check(self) -> None:

@@ -278,7 +278,8 @@ class FCFSScheduler:
         return admitted
 
     def plan_step(self, chunk_size: int = 0, prefill_budget: int = 0,
-                  spec_k: int = 0, spec_ema: float = 0.0) -> StepPlan:
+                  spec_k: int = 0, spec_ema: float = 0.0,
+                  allow_admission: bool = True) -> StepPlan:
         """One scheduling round.  Returns the step plan; ``chunk_size <= 1``
         reproduces the legacy all-through-decode behavior exactly.
 
@@ -300,7 +301,9 @@ class FCFSScheduler:
         and the pool reservation, never the compiled step."""
         self.retire_finished()
         preempted = self.grow_or_preempt()
-        admitted = self.admit()
+        # drain mode (DESIGN.md §14): finish what's running, leave the
+        # waiting queue intact for a post-drain snapshot
+        admitted = self.admit() if allow_admission else []
         copies, self._copies = self._copies, []
         if chunk_size <= 1 and spec_k <= 0:
             return StepPlan(decode=list(self.running), prefill=[],

@@ -297,6 +297,52 @@ def test_cancel_waiting_before_admission(mp):
     assert out[r2].tokens == [] and out[r2].finish_reason == "cancelled"
 
 
+def test_cancel_is_idempotent_for_unknown_and_finished(mp):
+    """cancel() is safe to call with anything: unknown rids, rids that
+    already finished (naturally or by cancel), and repeats — all return
+    False without touching engine state."""
+    m, params = mp
+    eng = Engine(m, params, ServeConfig(max_seqs=2, block_size=4,
+                                        max_len=32))
+    assert not eng.cancel(0)                     # never submitted
+    assert not eng.cancel(999)
+    rid = eng.add_request(_prompts(m.cfg, n=1)[0], max_new_tokens=4)
+    out, _ = eng.run()
+    assert out[rid].finish_reason == "length"
+    assert not eng.cancel(rid)                   # finished + retired
+    assert not eng.cancel(rid)                   # still False on repeat
+    eng.cache_host.check()
+
+
+def test_cancel_during_prefill_chunk(mp):
+    """Cancel a request whose prompt is mid-chunked-prefill: the
+    remaining chunks never dispatch, its blocks free fully (conservation
+    check), and other requests are unaffected."""
+    m, params = mp
+    eng = Engine(m, params, ServeConfig(max_seqs=2, block_size=4,
+                                        max_len=64, chunk_size=4))
+    long_p = [int(t) for t in rng.integers(0, m.cfg.vocab_size, 24)]
+    short_p = _prompts(m.cfg, n=1)[0]
+    ref = _serve(eng, [short_p], use_async=False, gen=6)
+
+    eng.reset()
+    victim = eng.add_request(long_p, max_new_tokens=6)
+    other = eng.add_request(short_p, max_new_tokens=6)
+    eng.step()                        # first prefill chunk only (4 < 24)
+    assert eng.cancel(victim)
+    assert not eng.cancel(victim)                # idempotent
+    while eng.scheduler.has_work or eng.pending_step:
+        eng.step()
+    out = eng.pop_finished()
+    assert out[victim].finish_reason == "cancelled"
+    assert out[victim].tokens == []
+    assert (tuple(out[other].tokens), out[other].finish_reason) \
+        == ref[next(iter(ref))]
+    a = eng.cache_host.allocator
+    assert a.num_live == 0, "cancelled prefill leaked blocks"
+    eng.cache_host.check()
+
+
 def test_deadline_expiry(mp):
     m, params = mp
     eng = Engine(m, params, ServeConfig(max_seqs=1, block_size=4,

@@ -1,0 +1,491 @@
+"""Chaos suite: seeded fault schedules against the serving engine
+(DESIGN.md §14).
+
+Every test drives the same request set twice — once fault-free for a
+reference, once under a deterministic :class:`FaultInjector` schedule —
+and asserts the crash-safety contract:
+
+  - no deadlock (every drive has a hard step bound);
+  - no leaked blocks (zero live / zero held at drain, and the full
+    conservation oracle ``PagedCache.check()`` passes);
+  - every request a fault did not touch finishes **byte-identical** to
+    the fault-free run;
+  - the injector's ``fired`` counter proves the schedule actually
+    exercised what the test claims.
+
+``CHAOS_SEED_OFFSET`` (CI matrix) shifts every injector seed so the
+rate-based schedules explore different firing patterns across lanes
+while each lane stays exactly reproducible.
+"""
+import os
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import build
+from repro.obs import Telemetry
+from repro.serve import (Engine, EngineOverloaded, Fault, FaultInjector,
+                         CrashError, ServeConfig, restore_into)
+
+rng = np.random.default_rng(29)
+SEED = int(os.environ.get("CHAOS_SEED_OFFSET", "0"))
+
+
+@pytest.fixture(scope="module")
+def mp(key):
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    m = build(cfg)
+    return m, m.init(key)
+
+
+def _prompts(cfg, n=5, base=10):
+    return [[int(t) for t in rng.integers(0, cfg.vocab_size,
+                                          base - (i % 4))]
+            for i in range(n)]
+
+
+def _cfg(**kw):
+    kw.setdefault("max_seqs", 3)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("num_blocks", 48)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("chunk_size", 8)
+    return ServeConfig(**kw)
+
+
+def _drive(eng, prompts, use_async=False, gen=8, faults=None,
+           max_steps=400, **kw):
+    """One full drive; returns {rid: (tokens, reason)}.
+
+    Asserts the crash-safety postconditions every chaos test shares:
+    bounded steps (no deadlock), zero live and zero held blocks (no
+    leaks, all injected holds released), conservation audit clean."""
+    eng.reset()
+    eng.faults = faults
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=gen, **kw)
+    step = eng.step_async if use_async else eng.step
+    n = 0
+    while eng.scheduler.has_work or eng.pending_step:
+        step()
+        n += 1
+        assert n <= max_steps, f"no progress after {n} steps: deadlock"
+    eng.faults = None
+    a = eng.cache_host.allocator
+    assert a.num_live == 0, f"leaked {a.num_live} live blocks"
+    assert a.num_held == 0, f"leaked {a.num_held} held blocks"
+    eng.cache_host.check()
+    return {r: (tuple(rec.tokens), rec.finish_reason)
+            for r, rec in eng.pop_finished().items()}
+
+
+# ---------------------------------------------------------------------------
+# Schedule 1: allocator exhaustion (alloc_hold pressure)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_async", [False, True])
+def test_alloc_exhaustion_byte_identical(mp, use_async):
+    """Holding most of the free pool mid-run forces preemption/unjam
+    paths, but once the holds expire every request must finish with
+    exactly the fault-free tokens."""
+    m, params = mp
+    eng = Engine(m, params, _cfg(num_blocks=24, audit_level="full"))
+    prompts = _prompts(m.cfg)
+    ref = _drive(eng, prompts, use_async)
+    fi = FaultInjector([
+        Fault("alloc_hold", step=1, blocks=10, hold_steps=2),
+        Fault("alloc_hold", rate=0.3, times=3, hold_steps=2),
+    ], seed=SEED)
+    got = _drive(eng, prompts, use_async, faults=fi)
+    assert fi.fired["alloc_hold"] >= 1
+    assert got == ref
+    assert eng._c["faults_injected"].value >= 1
+
+
+def test_alloc_exhaustion_total_hold_unjams(mp):
+    """Holding the ENTIRE free pool cannot deadlock the engine: plan's
+    OutOfBlocks path hands injected holds back (``_unjam``)."""
+    m, params = mp
+    eng = Engine(m, params, _cfg(num_blocks=20, audit_level="full"))
+    prompts = _prompts(m.cfg)
+    ref = _drive(eng, prompts)
+    fi = FaultInjector([Fault("alloc_hold", step=2, blocks=20,
+                              hold_steps=50)], seed=SEED)
+    got = _drive(eng, prompts, faults=fi)
+    assert fi.fired["alloc_hold"] == 1
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# Schedule 2: user on_token callback raises (satellite: callback hardening)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_async", [False, True])
+def test_injected_callback_error_isolated(mp, use_async):
+    """An injected exception inside one request's on_token callback
+    fails THAT request ("error") and leaves every other byte-identical."""
+    m, params = mp
+    eng = Engine(m, params, _cfg())
+    prompts = _prompts(m.cfg)
+    ref = _drive(eng, prompts, use_async)
+    victim = 1
+    seen: dict[int, list] = {r: [] for r in range(len(prompts))}
+
+    eng.reset()
+    fi = FaultInjector([Fault("callback_error", rate=1.0, times=1,
+                              rid=victim)], seed=SEED)
+    eng.faults = fi
+    for r, p in enumerate(prompts):
+        eng.add_request(p, max_new_tokens=8,
+                        on_token=lambda t, d, r=r: seen[r].append((t, d)))
+    step = eng.step_async if use_async else eng.step
+    n = 0
+    while eng.scheduler.has_work or eng.pending_step:
+        step()
+        n += 1
+        assert n <= 400
+    eng.faults = None
+    got = {r: (tuple(rec.tokens), rec.finish_reason)
+           for r, rec in eng.pop_finished().items()}
+    assert fi.fired["callback_error"] == 1
+    assert eng._c["callback_errors"].value == 1
+    assert got[victim][1] == "error"
+    for r in got:
+        if r != victim:
+            assert got[r] == ref[r]
+    # the victim's stream terminated with the (None, True) finish call
+    assert seen[victim] and seen[victim][-1] == (None, True)
+    eng.cache_host.check()
+
+
+@pytest.mark.parametrize("use_async", [False, True])
+def test_real_callback_exception_isolated(mp, use_async):
+    """A genuinely-raising user callback (no injector) is contained the
+    same way: only its request fails, the engine keeps serving."""
+    m, params = mp
+    eng = Engine(m, params, _cfg())
+    prompts = _prompts(m.cfg)
+    ref = _drive(eng, prompts, use_async)
+
+    def bad(tok, done):
+        raise RuntimeError("user callback bug")
+
+    eng.reset()
+    for r, p in enumerate(prompts):
+        eng.add_request(p, max_new_tokens=8,
+                        on_token=bad if r == 2 else None)
+    step = eng.step_async if use_async else eng.step
+    while eng.scheduler.has_work or eng.pending_step:
+        step()
+    got = {r: (tuple(rec.tokens), rec.finish_reason)
+           for r, rec in eng.pop_finished().items()}
+    assert got[2][1] == "error"
+    assert eng._c["callback_errors"].value >= 1
+    for r in got:
+        if r != 2:
+            assert got[r] == ref[r]
+    eng.cache_host.check()
+
+
+# ---------------------------------------------------------------------------
+# Schedule 3: transient + fatal device-sync errors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_async", [False, True])
+def test_sync_error_transient_redo(mp, use_async):
+    """A sync failure within the retry budget is invisible: the fetch
+    retries and the run stays byte-identical, counted as a recovery."""
+    m, params = mp
+    eng = Engine(m, params, _cfg(audit_level="full"))
+    prompts = _prompts(m.cfg)
+    ref = _drive(eng, prompts, use_async)
+    fi = FaultInjector([Fault("sync_error", step=2, times=1),
+                        Fault("sync_error", step=5, times=1)], seed=SEED)
+    got = _drive(eng, prompts, use_async, faults=fi)
+    assert fi.fired["sync_error"] >= 1
+    assert got == ref
+    assert eng._c["recoveries"].value >= 1
+
+
+@pytest.mark.parametrize("use_async", [False, True])
+def test_sync_error_fatal_fails_cleanly(mp, use_async):
+    """A sync failure past every retry aborts that step.  Affected
+    requests fail with "error" and tokens that are a prefix of their
+    reference stream; unaffected requests stay byte-identical; nothing
+    leaks and serving continues."""
+    m, params = mp
+    eng = Engine(m, params, _cfg(audit_level="full"))
+    prompts = _prompts(m.cfg)
+    ref = _drive(eng, prompts, use_async)
+    # times=3 exhausts the initial attempt + 2 retries of one step
+    fi = FaultInjector([Fault("sync_error", step=3, times=3)], seed=SEED)
+    got = _drive(eng, prompts, use_async, faults=fi)
+    assert fi.fired["sync_error"] == 3
+    assert set(got) == set(ref)
+    for r in got:
+        toks, reason = got[r]
+        if reason == ref[r][1]:
+            assert got[r] == ref[r]
+        else:
+            assert reason == "error"
+            assert toks == ref[r][0][:len(toks)]
+    assert eng._c["recoveries"].value >= 1
+
+
+# ---------------------------------------------------------------------------
+# Schedule 4: crash at step K + snapshot/restore
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_async", [False, True])
+def test_crash_at_step_k_restore_resumes(mp, use_async):
+    """Simulated hard crash: snapshot at K1, crash at K2 > K1, restore
+    the snapshot into a FRESH engine — the union of results is exactly
+    the fault-free run (work between K1 and K2 is replayed)."""
+    m, params = mp
+    cfg = _cfg(audit_level="full")
+    eng = Engine(m, params, cfg)
+    prompts = _prompts(m.cfg)
+    ref = _drive(eng, prompts, use_async)
+
+    eng.reset()
+    fi = FaultInjector([Fault("crash", step=5)], seed=SEED)
+    eng.faults = fi
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=8)
+    step = eng.step_async if use_async else eng.step
+    snap = None
+    with pytest.raises(CrashError):
+        n = 0
+        while eng.scheduler.has_work or eng.pending_step:
+            if eng._steps == 3 and snap is None:
+                snap = eng.snapshot()
+            step()
+            n += 1
+            assert n <= 400
+    assert snap is not None and fi.fired["crash"] == 1
+
+    eng2 = Engine(m, params, cfg)
+    restore_into(eng2, snap)
+    step2 = eng2.step_async if use_async else eng2.step
+    n = 0
+    while eng2.scheduler.has_work or eng2.pending_step:
+        step2()
+        n += 1
+        assert n <= 400
+    got = {r: (tuple(rec.tokens), rec.finish_reason)
+           for r, rec in eng2.pop_finished().items()}
+    assert got == ref
+    a = eng2.cache_host.allocator
+    assert a.num_live == 0 and a.num_held == 0
+    eng2.cache_host.check()
+
+
+# ---------------------------------------------------------------------------
+# Schedule 5: deadline storm under straggler steps
+# ---------------------------------------------------------------------------
+
+def test_deadline_storm_no_deadlock(mp):
+    """Slow steps + tight deadlines: expired requests finish "deadline",
+    survivors finish "length" with reference tokens, nothing leaks."""
+    m, params = mp
+    eng = Engine(m, params, _cfg(audit_level="full"))
+    prompts = _prompts(m.cfg, n=6)
+    ref = _drive(eng, prompts, gen=6)
+    fi = FaultInjector([Fault("slow_step", rate=0.5, times=20,
+                              delay_s=0.03)], seed=SEED)
+    eng.reset()
+    eng.faults = fi
+    for i, p in enumerate(prompts):
+        # half the requests get a deadline shorter than the storm
+        eng.add_request(p, max_new_tokens=6,
+                        deadline_s=0.05 if i % 2 else None)
+    n = 0
+    while eng.scheduler.has_work or eng.pending_step:
+        eng.step()
+        n += 1
+        assert n <= 400
+    eng.faults = None
+    got = {r: (tuple(rec.tokens), rec.finish_reason)
+           for r, rec in eng.pop_finished().items()}
+    assert fi.fired["slow_step"] >= 1
+    assert set(got) == set(ref)
+    for r, (toks, reason) in got.items():
+        assert reason in ("length", "deadline")
+        if reason == "length":
+            assert got[r] == ref[r]
+        else:
+            assert toks == ref[r][0][:len(toks)]
+    a = eng.cache_host.allocator
+    assert a.num_live == 0 and a.num_held == 0
+    eng.cache_host.check()
+
+
+# ---------------------------------------------------------------------------
+# Invariant auditing: corruption detected + recovered
+# ---------------------------------------------------------------------------
+
+def _corrupt_refcount(eng):
+    a = eng.cache_host.allocator
+    b = next(iter(a._ref))
+    a._ref[b] += 1                      # phantom reference
+
+
+def _corrupt_table(eng):
+    cache = eng.cache_host
+    s = eng.scheduler.running[0]
+    cache.tables[s.slot, 0] = cache.tables[s.slot, 0] + 1
+
+
+def _corrupt_index(eng):
+    cache = eng.cache_host
+    cache._block_of[(123456789,)] = cache.num_blocks + 7
+
+
+@pytest.mark.parametrize("corrupt", [_corrupt_refcount, _corrupt_table,
+                                     _corrupt_index],
+                         ids=["refcount", "table", "prefix-index"])
+def test_audit_detects_and_recovers(mp, corrupt):
+    """Injected host-state corruption mid-run: the per-step audit
+    detects it, recovery rebuilds from authoritative ownership, and the
+    run completes byte-identically (refcounts/tables/index are derived
+    state — no token history is lost) without crashing."""
+    m, params = mp
+    eng = Engine(m, params, _cfg(audit_level="full"))
+    prompts = _prompts(m.cfg)
+    ref = _drive(eng, prompts)
+
+    eng.reset()
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=8)
+    for _ in range(3):
+        eng.step()
+    assert eng.scheduler.running, "need live requests to corrupt"
+    corrupt(eng)
+    n = 0
+    while eng.scheduler.has_work or eng.pending_step:
+        eng.step()                      # audit fires inside the step
+        n += 1
+        assert n <= 400
+    got = {r: (tuple(rec.tokens), rec.finish_reason)
+           for r, rec in eng.pop_finished().items()}
+    assert eng._c["audit_violations"].value >= 1
+    assert eng._c["recoveries"].value >= 1
+    assert got == ref
+    a = eng.cache_host.allocator
+    assert a.num_live == 0 and a.num_held == 0
+    eng.cache_host.check()
+
+
+def test_audit_off_overhead_under_2pct(mp):
+    """audit_level="off" must cost < 2% of a step: its per-step cost is
+    one early-out call.  Measured like tests/test_obs.py — time the
+    gated no-op, scale by call sites per step, compare against the
+    cheapest measured real step."""
+    m, params = mp
+    eng = Engine(m, params, _cfg())
+    prompts = _prompts(m.cfg, n=3)
+    _drive(eng, prompts)                # compile
+    t0 = time.perf_counter()
+    _drive(eng, prompts)
+    steps = max(int(eng._c["steps"].value), 1)
+    # _drive resets (zeroing counters); measure this drive's steps only
+    step_s = (time.perf_counter() - t0) / steps
+
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(10000):
+            eng._audit_maybe()
+            eng._fault_tick()
+        best = min(best, (time.perf_counter() - t0) / 10000)
+    # one audit + one fault hook per step, generously doubled
+    assert 2 * best / step_s < 0.02, \
+        f"off-path overhead {2 * best / step_s:.4f} of a step"
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: load shedding is retriable
+# ---------------------------------------------------------------------------
+
+def test_degradation_sheds_and_recovers(mp):
+    """Sustained pool pressure engages the ladder: aged waiting requests
+    shed with the retriable "shed" reason, prefix admission pauses, and
+    the ladder disengages once pressure clears — shed requests then
+    complete normally on re-submission."""
+    m, params = mp
+    eng = Engine(m, params, _cfg(
+        num_blocks=16, degrade=True, shed_queue_age_s=1e-6,
+        pressure_threshold=0.9, pressure_window=1))
+    prompts = _prompts(m.cfg, n=6)
+    eng.reset()
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=6)
+    shed: list[int] = []
+    n = 0
+    while eng.scheduler.has_work or eng.pending_step:
+        eng.step()
+        n += 1
+        assert n <= 400
+        for r, rec in eng.pop_finished().items():
+            if rec.finish_reason == "shed":
+                shed.append(r)
+    assert shed, "pressure never shed anything"
+    assert eng._c["requests_shed"].value == len(shed)
+    assert eng.cache_host.admission_paused in (True, False)
+    # pressure is gone: ticking the ladder disengages it
+    for _ in range(eng.cfg.pressure_window + 1):
+        eng._degrade_tick()
+    assert not eng._degraded
+    assert not eng.cache_host.admission_paused
+    # shed = retriable: resubmit and finish normally
+    rid = eng.add_request(prompts[0], max_new_tokens=6)
+    while eng.scheduler.has_work or eng.pending_step:
+        eng.step()
+    rec = eng.pop_finished()[rid]
+    assert rec.finish_reason == "length"
+    a = eng.cache_host.allocator
+    assert a.num_live == 0 and a.num_held == 0
+    eng.cache_host.check()
+
+
+# ---------------------------------------------------------------------------
+# Terminal reasons are observable (satellite: shed/overload telemetry)
+# ---------------------------------------------------------------------------
+
+def test_terminal_reasons_distinct_in_trace(mp):
+    """Finish spans carry their terminal reason in span metadata, so a
+    trace distinguishes shed / deadline / length; EngineOverloaded
+    backpressure raises instead of silently dropping."""
+    m, params = mp
+    tel = Telemetry(enabled=True)
+    eng = Engine(m, params, _cfg(
+        num_blocks=16, max_waiting=2, degrade=True, shed_queue_age_s=1e-6,
+        pressure_threshold=0.9, pressure_window=2), telemetry=tel)
+    prompts = _prompts(m.cfg, n=5)
+    eng.reset()
+    # backpressure: the waiting-queue cap is a hard admission limit
+    for p in prompts[:2]:
+        eng.add_request(p, max_new_tokens=8)
+    with pytest.raises(EngineOverloaded):
+        eng.add_request(prompts[2], max_new_tokens=8)
+    eng.step()                          # admits both; queue drains
+    # an already-expired deadline -> "deadline" at the next boundary
+    eng.add_request(prompts[2], max_new_tokens=8, deadline_s=-1.0)
+    # aged waiting request shed once pool pressure engages -> "shed"
+    eng.add_request(prompts[3], max_new_tokens=8)
+    n = 0
+    while eng.scheduler.has_work or eng.pending_step:
+        eng.step()
+        n += 1
+        assert n <= 400
+    reasons = {dict(s.meta).get("reason") for s in tel.trace.spans
+               if s.kind == "finish"}
+    assert "length" in reasons          # the two served requests
+    assert "deadline" in reasons
+    assert "shed" in reasons
+    got = {r.finish_reason for r in eng.pop_finished().values()}
+    assert got == reasons

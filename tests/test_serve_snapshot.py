@@ -1,0 +1,241 @@
+"""Engine snapshot/restore (repro.serve.snapshot; DESIGN.md §14).
+
+The contract under test: a snapshot of a quiescent engine, restored into
+a FRESH config-identical engine, resumes serving **byte-identically** —
+same tokens, same finish reasons, same conservation state — across
+dense, quantized-KV, and speculative-decode configurations, through both
+the in-memory and the on-disk (versioned header + pickle) paths.
+"""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import build
+from repro.serve import (Engine, EngineOverloaded, ServeConfig,
+                         load_snapshot, restore_into, save_snapshot)
+from repro.serve import snapshot as snapmod
+
+rng = np.random.default_rng(41)
+
+
+@pytest.fixture(scope="module")
+def mp(key):
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    m = build(cfg)
+    return m, m.init(key)
+
+
+def _prompts(cfg, n=4, base=10):
+    return [[int(t) for t in rng.integers(0, cfg.vocab_size,
+                                          base - (i % 3))]
+            for i in range(n)]
+
+
+def _finish(eng):
+    n = 0
+    while eng.scheduler.has_work or eng.pending_step:
+        (eng.step_async if eng.cfg.async_step else eng.step)()
+        n += 1
+        assert n <= 400
+    return {r: (tuple(rec.tokens), rec.finish_reason)
+            for r, rec in eng.pop_finished().items()}
+
+
+def _engine(mp, **kw):
+    m, params = mp
+    draft = kw.pop("spec", False)
+    kw.setdefault("max_seqs", 3)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("chunk_size", 8)
+    if draft:
+        from repro.core.pruner import prune_model
+        kw.setdefault("spec_k", 3)
+        dr = prune_model(m, params, 0.5, criterion="l1")
+        return Engine(m, params, ServeConfig(**kw),
+                      draft_model=build(dr.cfg), draft_params=dr.params)
+    return Engine(m, params, ServeConfig(**kw))
+
+
+@pytest.mark.parametrize("variant", ["dense", "int8", "spec"])
+def test_roundtrip_resume_byte_identical(mp, variant):
+    """Mid-run snapshot -> restore into a fresh engine -> the restored
+    engine's full results equal the uninterrupted run's, for dense,
+    quantized-KV, and speculative-decode pools."""
+    kw = {"cache_dtype": "int8"} if variant == "int8" else \
+         {"spec": True} if variant == "spec" else {}
+    eng = _engine(mp, **kw)
+    prompts = _prompts(eng.model.cfg)
+    eng.reset()
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=8)
+    ref = _finish(eng)
+
+    eng.reset()
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=8)
+    for _ in range(4):
+        eng.step()
+    snap = eng.snapshot()
+    assert _finish(eng) == ref          # source engine is undisturbed
+
+    eng2 = _engine(mp, **kw)
+    restore_into(eng2, snap)
+    got = _finish(eng2)
+    assert got == ref
+    a = eng2.cache_host.allocator
+    assert a.num_live == 0 and a.num_held == 0
+    eng2.cache_host.check()
+
+
+def test_file_roundtrip_and_header(mp, tmp_path):
+    """save -> load through the on-disk format; the JSON header carries
+    identity/version without unpickling, and the restored run matches."""
+    eng = _engine(mp)
+    prompts = _prompts(eng.model.cfg)
+    eng.reset()
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=6)
+    ref = _finish(eng)
+
+    eng.reset()
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=6)
+    for _ in range(3):
+        eng.step()
+    path = str(tmp_path / "engine.rsrv")
+    header = save_snapshot(eng, path)
+    assert header["format"] == "repro-serve-snapshot"
+    assert header["version"] == snapmod.VERSION
+    assert header["model"] == eng.model.cfg.name
+    assert header["serve_config"]["block_size"] == eng.cfg.block_size
+    with open(path, "rb") as f:
+        assert f.read(len(snapmod.MAGIC)) == snapmod.MAGIC
+
+    snap = load_snapshot(path)
+    eng2 = _engine(mp)
+    restore_into(eng2, snap)
+    _finish(eng)                        # source completes its own run
+    assert _finish(eng2) == ref
+
+
+def test_load_rejects_garbage_and_mismatch(mp, tmp_path):
+    bad = tmp_path / "not_a_snapshot.bin"
+    bad.write_bytes(b"definitely not a snapshot")
+    with pytest.raises(ValueError, match="not a serve snapshot"):
+        load_snapshot(str(bad))
+
+    eng = _engine(mp)
+    eng.reset()
+    snap = eng.snapshot()
+    other = _engine(mp, block_size=8, max_len=64)
+    with pytest.raises(ValueError, match="ServeConfig mismatch"):
+        restore_into(other, snap)
+
+
+def test_temperature_resume_identical(mp):
+    """The PRNG key rides the snapshot, so even sampled (temperature>0)
+    serving resumes byte-identically."""
+    eng = _engine(mp)
+    prompts = _prompts(eng.model.cfg, n=3)
+
+    def run(snapshot_at=None):
+        eng.reset()
+        for p in prompts:
+            eng.add_request(p, max_new_tokens=8, temperature=0.8)
+        snap = None
+        n = 0
+        while eng.scheduler.has_work or eng.pending_step:
+            if snapshot_at is not None and eng._steps == snapshot_at \
+                    and snap is None:
+                snap = eng.snapshot()
+            eng.step()
+            n += 1
+            assert n <= 400
+        return {r: (tuple(rec.tokens), rec.finish_reason)
+                for r, rec in eng.pop_finished().items()}, snap
+
+    ref, _ = run()
+    _, snap = run(snapshot_at=3)
+    eng2 = _engine(mp)
+    restore_into(eng2, snap)
+    assert _finish(eng2) == ref
+
+
+def test_drain_preserves_waiting_for_restore(mp):
+    """drain() finishes in-flight work, refuses new admissions, and the
+    post-drain snapshot hands the still-waiting queue to a fresh engine:
+    drained + restored results together equal the uninterrupted run."""
+    eng = _engine(mp, max_seqs=2)
+    prompts = _prompts(eng.model.cfg, n=6)
+    eng.reset()
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=6)
+    ref = _finish(eng)
+
+    eng.reset()
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=6)
+    eng.step()                          # some admitted, some waiting
+    assert eng.scheduler.waiting, "need a backlog for this test"
+    drained = {r: (tuple(rec.tokens), rec.finish_reason)
+               for r, rec in eng.drain().items()}
+    assert drained and not eng.scheduler.running
+    with pytest.raises(EngineOverloaded, match="draining"):
+        eng.add_request(prompts[0], max_new_tokens=6)
+    snap = eng.snapshot()
+
+    eng2 = _engine(mp, max_seqs=2)
+    restore_into(eng2, snap)
+    assert eng2.scheduler.waiting
+    resumed = _finish(eng2)
+    assert set(drained) | set(resumed) == set(ref)
+    for r, v in {**drained, **resumed}.items():
+        assert v == ref[r]
+
+
+@pytest.mark.slow
+def test_sigterm_drains_and_snapshot_restores(tmp_path):
+    """The serving CLI drains on SIGTERM, writes a loadable snapshot,
+    and --restore serves the preserved backlog (exit 0 both times)."""
+    snap = str(tmp_path / "drain.rsrv")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--arch",
+           "tinyllama-1.1b", "--reduced", "--requests", "8",
+           "--prompt-len", "12", "--gen", "64", "--max-seqs", "2",
+           "--block-size", "4", "--snapshot-out", snap]
+    p = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                         stderr=subprocess.STDOUT, text=True, env=env)
+    try:
+        for line in p.stdout:
+            if "engine ready" in line:
+                break
+        time.sleep(1.0)
+        p.send_signal(signal.SIGTERM)
+        out, _ = p.communicate(timeout=300)
+    finally:
+        if p.poll() is None:
+            p.kill()
+    assert p.returncode == 0, out
+    assert "draining" in out and os.path.exists(snap)
+
+    loaded = load_snapshot(snap)
+    assert loaded["header"]["format"] == "repro-serve-snapshot"
+    n_wait = len(loaded["host"]["scheduler"]["waiting"])
+    assert n_wait > 0
+
+    r = subprocess.run(cmd[:-2] + ["--restore", snap],
+                       capture_output=True, text=True, env=env,
+                       timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert f"served {n_wait} requests" in r.stdout
