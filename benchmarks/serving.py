@@ -853,6 +853,134 @@ def chaos_rows(rate: float, out_path: str | None = None,
 
 
 # ---------------------------------------------------------------------------
+# Failover A/B (--failover): kill-a-replica goodput, byte-identical outputs
+# ---------------------------------------------------------------------------
+
+FAILOVER_SLOTS, FAILOVER_KILL_TICK = 12, 6
+
+
+def failover_rows(out_path: str | None = None,
+                  trace_path: str | None = None) -> list[str]:
+    """Replica-kill A/B (DESIGN.md §15): the same closed-loop request set
+    served three ways — one plain engine (the byte-parity oracle), a
+    2-replica cluster fault-free, and the same cluster with replica 0
+    killed mid-decode.  Failover re-homes the dead replica's running
+    requests (migrating KV blocks into the survivor's free slots, the
+    rest as waiting-with-recompute) and its backlog; every request must
+    still complete with tokens byte-identical to the single-engine run.
+    Reports the goodput cost of losing half the fleet mid-flight."""
+    from repro.obs import Telemetry, write_chrome
+    from repro.serve import Cluster, ClusterConfig, Fault, FaultInjector
+
+    cfg = bench_cfg()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    prompts = [[int(t) for t in rng.integers(0, cfg.vocab_size,
+                                             CHAOS_PROMPT - 4 * (i % 3))]
+               for i in range(CHAOS_NREQ)]
+    sc = ServeConfig(max_seqs=FAILOVER_SLOTS, block_size=16,
+                     max_len=CHAOS_PROMPT + CHAOS_GEN, chunk_size=16,
+                     audit_level="full")
+
+    # single-engine oracle (second drive measured; first compiles)
+    eng = Engine(model, params, sc)
+
+    def drive_single():
+        eng.reset()
+        for p in prompts:
+            eng.add_request(p, max_new_tokens=CHAOS_GEN)
+        t0 = time.perf_counter()
+        n = 0
+        while eng.scheduler.has_work or eng.pending_step:
+            eng.step()
+            n += 1
+            assert n <= 4000, "failover bench deadlocked (single)"
+        dt = time.perf_counter() - t0
+        recs = eng.pop_finished()
+        return dt, {i: tuple(recs[i].tokens) for i in sorted(recs)}
+
+    drive_single()                                  # compile
+    ref_dt, ref_out = drive_single()
+
+    engines = [Engine(model, params, sc), Engine(model, params, sc)]
+
+    def drive_cluster(tel, faults):
+        cluster = Cluster(engines, ClusterConfig(), telemetry=tel,
+                          faults=faults)
+        rids = [cluster.submit(p, max_new_tokens=CHAOS_GEN)
+                for p in prompts]
+        t0 = time.perf_counter()
+        res, stats = cluster.run(max_ticks=4000)
+        dt = time.perf_counter() - t0
+        assert not cluster.has_work, "failover bench deadlocked (cluster)"
+        cluster.check()
+        for r in cluster.replicas:
+            if r.state == "alive":
+                a = r.engine.cache_host.allocator
+                assert a.num_live == 0 and a.num_held == 0, \
+                    "leaked blocks on a surviving allocator"
+        out = {rids.index(rid): (tuple(rec.tokens), rec.finish_reason)
+               for rid, rec in res.items()}
+        done = [v for v, reason in out.values() if reason == "length"]
+        return {
+            "goodput_tok_per_s":
+                sum(len(v) for v in done) / max(dt, 1e-9),
+            "completed": len(done),
+            "failed": len(out) - len(done),
+            "makespan_s": dt,
+            **{k: stats[k] for k in ("failovers", "migrated_blocks",
+                                     "ticks", "steps")},
+        }, out
+
+    drive_cluster(None, None)                       # compile both replicas
+    clean, clean_out = drive_cluster(Telemetry(enabled=True), None)
+
+    fi = FaultInjector([Fault("replica_kill", step=FAILOVER_KILL_TICK,
+                              rid=0)])
+    tel = Telemetry(enabled=True)
+    killed, killed_out = drive_cluster(tel, fi)
+
+    assert fi.fired["replica_kill"] == 1
+    assert killed["failovers"] == 1
+    for got, label in ((clean_out, "clean"), (killed_out, "failover")):
+        assert {i: v for i, (v, _) in got.items()} == ref_out, \
+            f"{label} cluster outputs diverge from the single-engine run"
+        assert all(reason == "length" for _, reason in got.values()), \
+            f"{label} cluster failed requests"
+
+    degr = clean["goodput_tok_per_s"] / max(killed["goodput_tok_per_s"],
+                                            1e-9)
+    rows = [
+        f"serving_failover_goodput_clean,"
+        f"{1e6 / max(clean['goodput_tok_per_s'], 1e-9):.1f},"
+        f"{clean['goodput_tok_per_s']:.1f} tok/s on 2 healthy replicas "
+        f"({clean['completed']}/{CHAOS_NREQ} completed)",
+        f"serving_failover_goodput,"
+        f"{1e6 / max(killed['goodput_tok_per_s'], 1e-9):.1f},"
+        f"{killed['goodput_tok_per_s']:.1f} tok/s with replica 0 killed "
+        f"at tick {FAILOVER_KILL_TICK} ({killed['completed']}/"
+        f"{CHAOS_NREQ} completed, {degr:.2f}x slower, byte-identical)",
+        f"serving_failover_migrated,{killed['migrated_blocks']:.0f},"
+        f"{killed['migrated_blocks']:.0f} KV(+scale) blocks migrated to "
+        f"the survivor ({killed['failovers']:.0f} failover)",
+    ]
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump({"rows": rows, "requests": CHAOS_NREQ,
+                       "gen": CHAOS_GEN, "replicas": 2,
+                       "kill_tick": FAILOVER_KILL_TICK,
+                       "single_makespan_s": ref_dt, "clean": clean,
+                       "killed": killed, "goodput_degradation": degr,
+                       "byte_identical": True}, f, indent=1)
+    if trace_path:
+        os.makedirs(os.path.dirname(trace_path) or ".", exist_ok=True)
+        write_chrome(tel.trace, trace_path)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Sharded serving (--sharded): data-parallel slots, byte-identical outputs
 # ---------------------------------------------------------------------------
 
@@ -1023,6 +1151,10 @@ if __name__ == "__main__":
                     help="run the chaos A/B section: goodput + p99 TTFT "
                          "fault-free vs a seeded fault schedule firing "
                          "at this per-opportunity rate")
+    ap.add_argument("--failover", action="store_true",
+                    help="run the replica-kill failover A/B: goodput on "
+                         "2 healthy replicas vs one killed mid-decode, "
+                         "outputs byte-checked against a single engine")
     ap.add_argument("--sharded-worker", default=None, metavar="DxM",
                     help=argparse.SUPPRESS)   # internal subprocess mode
     ap.add_argument("--out", default=None,
@@ -1040,6 +1172,8 @@ if __name__ == "__main__":
                 else sharded_rows(args.out) if args.sharded
                 else quant_rows(args.cache_dtype, args.out)
                 if args.cache_dtype
+                else failover_rows(args.out, args.trace_out)
+                if args.failover
                 else chaos_rows(args.fault_rate, args.out,
                                 args.trace_out)
                 if args.fault_rate

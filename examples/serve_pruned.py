@@ -11,7 +11,13 @@ an int8-quantized KV pool (``cache_dtype``): ~3.8x more history per HBM
 byte, dequant fused into the paged-attention kernel (DESIGN.md §11),
 then re-serves with telemetry on (DESIGN.md §12): outputs stay
 byte-identical while per-step phase timings, pool gauges and a
-Perfetto-loadable Chrome trace come out for free.
+Perfetto-loadable Chrome trace come out for free.  The closing section
+serves replicated (DESIGN.md §15): two engine replicas behind a
+``Cluster`` router, a replica killed mid-decode with its running
+requests re-homed — KV blocks migrated byte-for-byte where the
+survivor has room — and a rolling restart, all with byte-identical
+outputs and zero failed requests.  The same topology is available from
+the CLI via ``--replicas N`` (SIGHUP triggers a live rolling restart).
 
   PYTHONPATH=src python examples/serve_pruned.py
 
@@ -128,6 +134,37 @@ def main():
           f"(prefix hit rate {hit:.0%})")
     print(f"        trace -> {trace_path}  "
           f"(load in https://ui.perfetto.dev)")
+
+    # replicated serving: two engine replicas behind a Cluster router
+    # (DESIGN.md §15).  One replica is killed mid-decode; its running
+    # requests migrate to the survivor — raw KV blocks when the tiers
+    # match, recompute-from-prefix otherwise — and every request still
+    # finishes byte-identical to the single-engine runs above.  A
+    # rolling restart then bounces each replica with zero failures.
+    from repro.serve import Cluster, ClusterConfig, Fault, FaultInjector
+    engines = [Engine(model, params, SERVE) for _ in range(2)]
+    fi = FaultInjector([Fault("replica_kill", step=4, rid=0)])
+    cluster = Cluster(engines, ClusterConfig(), faults=fi)
+    # 12 of the 16 prompts: the survivor keeps free slots, so some of
+    # the dead replica's requests migrate with their KV bytes intact
+    # (the rest re-home as waiting and recompute from token history)
+    sub = prompts[:12]
+    rids = [cluster.submit(p, max_new_tokens=GEN) for p in sub]
+    out_c, cstats = cluster.run()
+    assert all(out_c[r].tokens == out_d[d].tokens
+               for d, r in enumerate(rids)), \
+        "failover must preserve byte-identical outputs"
+    print(f"repl  : replica 0 killed at tick 4; "
+          f"{cstats['failovers']:.0f} failover re-homed "
+          f"{cstats['migrated_blocks']:.0f} KV blocks; "
+          f"{len(rids)}/{len(sub)} requests byte-identical on survivor")
+    cluster.rolling_restart()           # bounces each surviving replica
+    rids = [cluster.submit(p, max_new_tokens=GEN) for p in sub]
+    out_r, _ = cluster.run()
+    ok = sum(out_r[r].finish_reason == "length" for r in rids)
+    assert ok == len(sub)
+    print(f"repl  : rolling restart served {ok}/{len(sub)} "
+          f"with zero failures")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,15 @@ finishes in-flight requests, and — with ``--snapshot-out PATH`` — writes
 an engine snapshot whose waiting queue a fresh process can resume
 byte-identically via ``--restore PATH`` (which rebuilds the engine from
 the snapshot's own ServeConfig; CLI engine flags are ignored).
+``--drain-timeout S`` bounds any drain: stragglers past the deadline are
+force-preempted back to the waiting queue instead of blocking shutdown.
+
+``--replicas N`` serves behind a fault-tolerant :class:`Cluster` of N
+engine replicas (DESIGN.md §15): requests route to the least-loaded
+alive replica, replica death fails its requests over onto survivors via
+snapshot/block handoff (byte-identical at temperature 0), and SIGHUP
+triggers a rolling restart of every replica in turn with zero failed
+requests.
 
 ``generate`` (sequential, token-by-token) is kept as the correctness
 oracle the engine is tested against (tests/test_serve.py).
@@ -104,9 +113,59 @@ def build_engine(cfg, model, params, args, draft_model=None,
         cache_dtype=args.cache_dtype, async_step=args.async_step,
         audit_level=getattr(args, "audit_level", "off"),
         audit_interval=getattr(args, "audit_interval", 1),
-        degrade=getattr(args, "degrade", False)),
+        degrade=getattr(args, "degrade", False),
+        drain_timeout_s=getattr(args, "drain_timeout", 0.0)),
         draft_model=draft_model, draft_params=draft_params, mesh=mesh,
         telemetry=telemetry)
+
+
+def _serve_replicated(engines, args, toks, lens, stop, telemetry):
+    """Replicated serving (DESIGN.md §15): N health-checked engine
+    replicas behind a Cluster router.  SIGHUP triggers a rolling
+    restart (drain + backlog re-homing + snapshot round-trip per
+    replica, zero failed requests); SIGTERM/SIGINT drain all replicas
+    and exit."""
+    from repro.serve import Cluster, ClusterConfig
+    cluster = Cluster(engines, ClusterConfig(
+        drain_timeout_s=args.drain_timeout or 30.0), telemetry=telemetry)
+    hup: dict[str, int] = {}
+    signal.signal(signal.SIGHUP,
+                  lambda signum, frame: hup.setdefault("hup", signum))
+    t0 = time.time()
+    for i in range(args.requests):
+        cluster.submit([int(t) for t in toks[i, :lens[i]]],
+                       max_new_tokens=args.gen,
+                       temperature=args.temperature)
+    print(f"cluster ready ({args.replicas} replicas)", flush=True)
+    while True:
+        out, stats = cluster.run(
+            stop_when=lambda: "sig" in stop or "hup" in hup)
+        if "hup" in hup and "sig" not in stop:
+            hup.clear()
+            print("SIGHUP: rolling restart", flush=True)
+            cluster.rolling_restart()
+            continue
+        break
+    if "sig" in stop:
+        print(f"signal {stop['sig']}: draining replicas", flush=True)
+        out.update(cluster.drain_all(args.drain_timeout))
+    dt = time.time() - t0
+    n_new = sum(len(r.tokens) for r in out.values())
+    print(f"served {len(out)} requests / {n_new} new tokens in {dt:.2f}s "
+          f"(incl. compile)")
+    print(f"cluster: {stats['ticks']:.0f} ticks | "
+          f"{stats['steps']:.0f} engine steps | "
+          f"{stats['alive']:.0f}/{stats['replicas']:.0f} alive | "
+          f"failovers {stats['failovers']:.0f} | "
+          f"migrated blocks {stats['migrated_blocks']:.0f}")
+    if out:
+        first = out[min(out)]
+        print("sample token ids:", first.tokens[:16])
+    if args.trace_out:
+        from repro.obs import write_chrome
+        write_chrome(telemetry.trace, args.trace_out)
+        print(f"chrome trace -> {args.trace_out} "
+              f"(one phase track per replica)")
 
 
 def main():
@@ -171,6 +230,16 @@ def main():
                     help="graceful degradation under pool pressure: "
                          "shed aged waiting requests, clamp spec K, "
                          "pause prefix-cache admission")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve behind a fault-tolerant Cluster of N "
+                         "engine replicas: health-checked routing, "
+                         "failover via snapshot/block handoff, and "
+                         "SIGHUP-triggered rolling restarts "
+                         "(DESIGN.md §15)")
+    ap.add_argument("--drain-timeout", type=float, default=0.0,
+                    help="drain() deadline in seconds: running requests "
+                         "past it are force-preempted to the waiting "
+                         "queue (0 = unbounded)")
     ap.add_argument("--snapshot-out", default="",
                     help="write an engine snapshot here after a "
                          "SIGTERM/SIGINT drain (resume via --restore)")
@@ -250,6 +319,14 @@ def main():
     for sig in (signal.SIGTERM, signal.SIGINT):
         signal.signal(sig, lambda signum, frame: stop.setdefault(
             "sig", signum))
+
+    if args.replicas > 1:
+        extra = [build_engine(cfg, model, params, args, draft_model,
+                              draft_params, telemetry=None)
+                 for _ in range(args.replicas - 1)]
+        _serve_replicated([engine] + extra, args, toks, lens, stop,
+                          telemetry)
+        return
 
     t0 = time.time()
     if not args.restore:

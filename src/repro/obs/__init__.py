@@ -64,15 +64,27 @@ class _PhaseTimer:
         t1 = self.tel.trace.now()
         self.tel.registry.histogram("phase/" + self.name).observe(
             t1 - self.t0)
-        self.tel.trace.add_phase(self.step, self.name, self.t0, t1)
+        self.tel.trace.add_phase(self.step, self.name, self.t0, t1,
+                                 track=self.tel.track)
         return False
 
 
 class Telemetry:
-    def __init__(self, enabled: bool = True, clock=time.perf_counter):
+    """One observability handle.
+
+    ``trace``/``track`` support replicated serving: a cluster builds one
+    shared :class:`TraceBuffer` and hands each replica its own Telemetry
+    view (``Telemetry(trace=shared, track=i)``) — phases from every
+    replica land in one Chrome trace on separate tracks, while each view
+    keeps a *private* MetricsRegistry (an engine's ``reset()``/restore
+    rewrites its counters, which must not clobber cluster totals)."""
+
+    def __init__(self, enabled: bool = True, clock=time.perf_counter,
+                 trace: TraceBuffer | None = None, track: int = 0):
         self.enabled = enabled
         self.registry = MetricsRegistry()
-        self.trace = TraceBuffer(clock=clock)
+        self.trace = trace if trace is not None else TraceBuffer(clock=clock)
+        self.track = track
 
     def phase(self, name: str, step: int = 0):
         """Context manager timing one step phase; null when disabled."""

@@ -35,6 +35,10 @@ class PhaseEvent:
     name: str
     t0: float
     t1: float
+    # Chrome-trace thread the phase renders on.  Track 0 is the classic
+    # single-engine "engine step" thread; a cluster gives each replica
+    # its own track so one trace shows N step timelines side by side.
+    track: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +85,7 @@ class TraceBuffer:
         self.spans: deque[SpanEvent] = deque(maxlen=capacity)
         self.counters: deque[CounterSample] = deque(maxlen=capacity)
         self.dropped_events = 0
+        self._track_names: dict[int, str] = {0: "engine step"}
 
     def now(self) -> float:
         return self.clock()
@@ -90,8 +95,14 @@ class TraceBuffer:
             self.dropped_events += 1
         dq.append(ev)
 
-    def add_phase(self, step: int, name: str, t0: float, t1: float) -> None:
-        self._push(self.phases, PhaseEvent(step, name, t0, t1))
+    def set_track_name(self, track: int, name: str) -> None:
+        """Label a phase track (rendered as a thread name in the Chrome
+        export — clusters name one track per replica)."""
+        self._track_names[track] = name
+
+    def add_phase(self, step: int, name: str, t0: float, t1: float,
+                  track: int = 0) -> None:
+        self._push(self.phases, PhaseEvent(step, name, t0, t1, track))
 
     def add_span(self, rid: int, kind: str, t: float | None = None,
                  **meta) -> None:
@@ -122,12 +133,15 @@ def to_chrome(buf: TraceBuffer) -> dict:
     ev: list[dict] = [
         {"ph": "M", "name": "process_name", "pid": 0,
          "args": {"name": "repro.serve engine"}},
-        {"ph": "M", "name": "thread_name", "pid": 0, "tid": 0,
-         "args": {"name": "engine step"}},
     ]
+    tracks = set(buf._track_names) | {p.track for p in buf.phases}
+    for tid in sorted(tracks):
+        ev.append({"ph": "M", "name": "thread_name", "pid": 0, "tid": tid,
+                   "args": {"name": buf._track_names.get(
+                       tid, f"replica {tid}")}})
     last_t = buf.epoch
     for p in buf.phases:
-        ev.append({"ph": "X", "pid": 0, "tid": 0, "name": p.name,
+        ev.append({"ph": "X", "pid": 0, "tid": p.track, "name": p.name,
                    "cat": "phase", "ts": us(p.t0),
                    "dur": max(us(p.t1) - us(p.t0), 0.0),
                    "args": {"step": p.step}})

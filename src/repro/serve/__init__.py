@@ -1,16 +1,20 @@
+from repro.serve.cluster import Cluster, ClusterConfig, Replica
 from repro.serve.engine import (AuditViolation, Engine, EngineOverloaded,
-                                FinishedRequest, ServeConfig)
+                                FinishedRequest, SequenceHandoff,
+                                ServeConfig)
 from repro.serve.faults import (CrashError, Fault, FaultError,
                                 FaultInjector)
 from repro.serve.kv_cache import BlockAllocator, OutOfBlocks, PagedCache
 from repro.serve.scheduler import (FCFSScheduler, Request, RequestState,
                                    StepPlan)
-from repro.serve.snapshot import (load as load_snapshot, restore_engine,
+from repro.serve.snapshot import (adopt_requests, capture_requests,
+                                  load as load_snapshot, restore_engine,
                                   restore_into, save_snapshot)
 
 __all__ = ["Engine", "EngineOverloaded", "FinishedRequest", "ServeConfig",
+           "SequenceHandoff", "Cluster", "ClusterConfig", "Replica",
            "AuditViolation", "Fault", "FaultInjector", "FaultError",
            "CrashError", "BlockAllocator", "OutOfBlocks", "PagedCache",
            "FCFSScheduler", "Request", "RequestState", "StepPlan",
            "save_snapshot", "load_snapshot", "restore_into",
-           "restore_engine"]
+           "restore_engine", "capture_requests", "adopt_requests"]

@@ -81,6 +81,7 @@ byte-identical to the single-device engine at temperature 0
 from __future__ import annotations
 
 import contextlib
+import copy
 import dataclasses
 import math
 import time
@@ -108,7 +109,9 @@ _RUN_COUNTERS = ("steps", "decode_tokens", "prefill_tokens",
                  "spec_cycles", "spec_proposed", "spec_accepted",
                  # fault-tolerance layer (DESIGN.md §14)
                  "faults_injected", "recoveries", "requests_shed",
-                 "audit_violations", "callback_errors")
+                 "audit_violations", "callback_errors",
+                 # cluster failover / block migration (DESIGN.md §15)
+                 "migrated_blocks")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,6 +173,14 @@ class ServeConfig:
                                       # (or the waiting queue is full)
     pressure_window: int = 3          # consecutive pressured (calm)
                                       # steps to engage (disengage)
+    drain_timeout_s: float = 0.0      # drain() deadline: running
+                                      # requests still unfinished after
+                                      # this many seconds are force-
+                                      # preempted into the waiting queue
+                                      # (waiting-with-prefix, snapshot-
+                                      # able) so a straggler cannot
+                                      # stall a rolling restart
+                                      # (0 = unbounded)
 
     @property
     def blocks_per_seq(self) -> int:
@@ -215,6 +226,45 @@ class FinishedRequest:
     finish_reason: str = "length"     # stop | length | cancelled |
                                       # deadline | shed (load shedding) |
                                       # error (callback raise / fault)
+
+
+@dataclasses.dataclass
+class SequenceHandoff:
+    """One request's portable state for failover / migration (DESIGN.md
+    §15): everything a byte-compatible engine needs to resume the
+    request without recompute — the request state (slot-independent),
+    its latency wall clocks, and (for requests that were running on an
+    attention-family single-device engine) the committed hash chain plus
+    the raw pool bytes of its KV(+scale) blocks, gathered block-wise
+    from the source pools.  ``key`` is the exporter's ``handoff_key()``;
+    an adopter whose key differs falls back to waiting-with-recompute,
+    which is still byte-identical at temperature 0 (the recompute-
+    preemption contract).  Host-only transport: ``on_token``/``deadline``
+    ride along in-process but are not serializable."""
+    state: RequestState
+    clocks: dict[str, float]
+    key: tuple = ()
+    num_cached: int = 0               # tokens the pool bytes cover
+    draft_cached: int = 0             # tokens the draft pool bytes cover
+    chain: list[int] = dataclasses.field(default_factory=list)
+    pools: dict[str, Any] | None = None        # (L, n_blocks, ...) bytes
+    draft_pools: dict[str, Any] | None = None
+    on_token: Any = None
+    deadline: float | None = None
+
+
+# latency wall clocks that ride a handoff (name -> the engine's per-rid
+# dict attribute), so TTFT / queue-wait / preempt-stall accounting
+# survives re-homing onto another replica
+_HANDOFF_CLOCKS = (("submit", "_submit_wall"), ("first_tok",
+                   "_first_tok_wall"), ("last_tok", "_last_tok_wall"),
+                   ("queue_wait", "_queue_wait"),
+                   ("preempt", "_preempt_wall"),
+                   ("preempt_stall", "_preempt_stall"))
+
+# pool entries that ride block migration (the same set _cow_impl copies:
+# KV plus the per-(token, head) scale pools sharing block addressing)
+_POOL_KEYS = ("k", "v", "k_scale", "v_scale")
 
 
 @dataclasses.dataclass
@@ -1422,18 +1472,51 @@ class Engine:
                     self._finish_early(s, "shed")
                     self.scheduler.drop_waiting(s)
 
-    def drain(self) -> dict[int, FinishedRequest]:
+    def drain(self, timeout_s: float | None = None
+              ) -> dict[int, FinishedRequest]:
         """Graceful shutdown: stop admitting waiting requests, run every
         already-admitted request to completion (reconciling any in-flight
         async step), and return the drained records.  Waiting requests
         stay queued — a snapshot taken after ``drain()`` preserves them
         for a restored engine to serve.  ``add_request`` raises
-        EngineOverloaded while draining; ``reset()`` clears the state."""
+        EngineOverloaded while draining; ``reset()`` clears the state.
+
+        ``timeout_s`` (default ``cfg.drain_timeout_s``; 0 = unbounded)
+        deadlines the drain: requests still running when it expires are
+        force-preempted into the waiting queue as waiting-with-prefix
+        (prompt + generated tokens ride along for recompute on
+        re-admission), so one hung or long-tailed request cannot stall a
+        rolling restart forever.  Nothing is failed — the preempted
+        requests survive into the snapshot / backlog re-homing."""
+        if timeout_s is None:
+            timeout_s = self.cfg.drain_timeout_s
+        deadline = time.time() + timeout_s if timeout_s > 0 else None
         self._draining = True
         step = self.step_async if self.cfg.async_step else self.step
         while self.scheduler.running or self.pending_step:
+            if deadline is not None and time.time() >= deadline:
+                self._force_preempt_running()
+                break
             step()
         return self.pop_finished()
+
+    def _force_preempt_running(self) -> None:
+        """Drain-deadline enforcement: reconcile any in-flight step, then
+        preempt every unfinished running request back to the waiting
+        queue — exactly the recompute preemption pool pressure applies,
+        so the requests stay byte-identically resumable.  Oldest requests
+        end up at the queue's head (FCFS is preserved)."""
+        if self._pending is not None:
+            rec, self._pending = self._pending, None
+            self._reconcile(rec)
+        self.scheduler.retire_finished()
+        now = time.time()
+        for s in sorted(self.scheduler.running,
+                        key=lambda r: r.req.rid, reverse=True):
+            self.scheduler._preempt(s)
+            self._preempt_wall[s.req.rid] = now
+            self.obs.event("preempt", s.req.rid)
+        self._idle_release_holds()
 
     def snapshot(self):
         """Serialize full host state + device pools (repro.serve.snapshot;
@@ -1450,6 +1533,197 @@ class Engine:
         restored engine resumes byte-identically (DESIGN.md §14)."""
         from repro.serve import snapshot as _snap
         _snap.restore_into(self, snap)
+
+    # ----- failover handoff / adoption (DESIGN.md §15) -----
+    def handoff_key(self) -> tuple:
+        """Byte-compatibility fingerprint for migrated pool blocks: two
+        engines whose keys match write bit-identical KV(+scale) bytes at
+        the same block coordinates, so exported blocks can scatter
+        straight into the adopter's pools.  A mismatch (different model
+        tier, block size, or pool dtype) downgrades adoption to
+        waiting-with-recompute."""
+        return (self.model.cfg.name, self.model.cfg.vocab_size,
+                self.cfg.block_size, self.cfg.cache_dtype,
+                self.draft_model.cfg.name if self.spec_active else "",
+                self.cfg.draft_cache_dtype if self.spec_active else "")
+
+    @property
+    def can_handoff_blocks(self) -> bool:
+        """Block-byte migration is gated to single-device attention
+        engines: per-shard DP pool replicas hold a block's bytes only on
+        its home shard (a host gather would read other shards' garbage),
+        and SSM/hybrid recurrent state is per-slot, not per-block, so it
+        cannot ride the block transport.  Gated-off engines still hand
+        requests off — as waiting-with-recompute."""
+        return (self.mesh is None and self.model.cfg.family != "ssm"
+                and not self.model.cfg.hybrid)
+
+    def discard_inflight(self) -> None:
+        """Forget a dispatched-but-unreconciled step *without* its device
+        fetch — failover salvage for a replica declared dead, where the
+        in-flight sample values are treated as lost.  Predicted growth
+        rolls back to known tokens (the same clamp ``_recover`` applies),
+        leaving the host state quiescent and exportable."""
+        self._pending = None
+        for s in list(self.scheduler.running) + list(self.scheduler.waiting):
+            s.pending = 0
+            s.num_cached = max(0, min(s.num_cached, len(s.seq) - 1))
+            s.draft_cached = min(s.draft_cached, max(s.num_cached, 0))
+
+    def export_request(self, rid: int, remove: bool = False
+                       ) -> SequenceHandoff:
+        """Export one live (running or waiting) request as a
+        :class:`SequenceHandoff`.  Running requests on a block-handoff-
+        capable engine carry their KV(+scale) pool bytes — one batched
+        ``device_get`` over the slot's blocks — plus the committed hash
+        chain, so a byte-compatible adopter resumes decode without
+        recompute and can re-register the prefix in its own index.
+        ``remove=True`` also retires the request here (releasing its
+        slot), for live migration off a draining engine."""
+        if self._pending is not None:
+            rec, self._pending = self._pending, None
+            self._reconcile(rec)
+        src = next((s for s in self.scheduler.running if s.req.rid == rid),
+                   None)
+        from_running = src is not None
+        if src is None:
+            src = next((s for s in self.scheduler.waiting
+                        if s.req.rid == rid), None)
+        if src is None:
+            raise KeyError(f"rid {rid} is not live")
+        st = copy.deepcopy(src)
+        st.pending = 0
+        st.num_cached = max(0, min(st.num_cached, len(st.seq) - 1))
+        st.draft_cached = min(st.draft_cached, st.num_cached)
+        clocks = {name: getattr(self, attr)[rid]
+                  for name, attr in _HANDOFF_CLOCKS
+                  if rid in getattr(self, attr)}
+        h = SequenceHandoff(state=st, clocks=clocks,
+                            key=self.handoff_key(),
+                            on_token=self._on_token.get(rid),
+                            deadline=self._deadline.get(rid))
+        if from_running and self.can_handoff_blocks and st.num_cached > 0:
+            blocks, chain = self.cache_host.export_slot(src.slot,
+                                                        st.num_cached)
+            h.num_cached = st.num_cached
+            h.chain = chain
+            h.pools = self._gather_blocks(self.cache, blocks)
+            if self.spec_active and st.draft_cached > 0:
+                nd = self.cache_host.blocks_for(st.draft_cached)
+                h.draft_pools = self._gather_blocks(self.draft_cache,
+                                                    blocks[:nd])
+                h.draft_cached = st.draft_cached
+        st.slot = -1
+        self.obs.event("export", rid)
+        if remove:
+            if from_running:
+                self.scheduler._release(src)
+            else:
+                self.scheduler.waiting.remove(src)
+            self._forget_rid(rid)
+        return h
+
+    def export_backlog(self, remove: bool = False) -> list[SequenceHandoff]:
+        """Export every waiting (not yet admitted, unfinished) request in
+        queue order — the dead/draining replica's backlog the cluster
+        re-homes onto survivors."""
+        rids = [s.req.rid for s in self.scheduler.waiting if not s.done]
+        return [self.export_request(rid, remove=remove) for rid in rids]
+
+    def adopt(self, h: SequenceHandoff) -> int:
+        """Adopt a handed-off request under a fresh local rid (returned).
+        When the handoff carries pool bytes, the engine is byte-
+        compatible (``handoff_key``), and a free slot + pool room exist,
+        the blocks import directly (``PagedCache.import_slot``) and the
+        request resumes decode with zero recompute; otherwise it joins
+        the waiting queue and re-prefills its known prefix — either way
+        the token stream is byte-identical at temperature 0.  Raises
+        ValueError if the request cannot fit this engine at all."""
+        st = copy.deepcopy(h.state)
+        req = st.req
+        if len(req.prompt) + req.max_new_tokens > self.cache_host.max_len:
+            raise ValueError(
+                f"adopt: prompt+max_new "
+                f"{len(req.prompt) + req.max_new_tokens} exceeds per-seq "
+                f"capacity {self.cache_host.max_len}")
+        worst = self.cache_host.blocks_for(
+            len(req.prompt) + req.max_new_tokens)
+        if worst > self.cache_host.allocator.num_blocks - 1:
+            raise ValueError(f"adopt: needs up to {worst} blocks but the "
+                             f"pool has "
+                             f"{self.cache_host.allocator.num_blocks - 1}")
+        rid = self._rid
+        self._rid += 1
+        st.req = dataclasses.replace(req, rid=rid)
+        st.slot = -1
+        st.pending = 0
+        self._submit_wall[rid] = h.clocks.get("submit", time.time())
+        for name, attr in _HANDOFF_CLOCKS:
+            if name != "submit" and name in h.clocks:
+                getattr(self, attr)[rid] = h.clocks[name]
+        if h.on_token is not None:
+            self._on_token[rid] = h.on_token
+        if h.deadline is not None:
+            self._deadline[rid] = h.deadline
+        self.obs.event("adopt", rid)
+        if not self._adopt_blocks(st, h):
+            st.num_cached = 0
+            st.draft_cached = 0
+            self.scheduler.adopt_waiting(st)
+        return rid
+
+    def _adopt_blocks(self, st: RequestState, h: SequenceHandoff) -> bool:
+        """Seat an adopted request straight into a slot with its migrated
+        pool bytes.  False (nothing mutated) when the handoff carries no
+        blocks, keys mismatch, no slot is free, or the pool lacks room —
+        the caller falls back to waiting-with-recompute."""
+        if (h.pools is None or h.key != self.handoff_key()
+                or not self.can_handoff_blocks
+                or not self.scheduler._free_slots):
+            return False
+        cache, sched = self.cache_host, self.scheduler
+        slot = sched._pick_slot()
+        n = next(iter(h.pools.values())).shape[1]
+        try:
+            dst = cache.import_slot(slot, n, h.chain,
+                                    n_tokens=st.seq_len + 1)
+        except OutOfBlocks:
+            return False
+        st.num_cached = h.num_cached
+        sched.adopt_running(st, slot)
+        self.cache = self._scatter_blocks(self.cache, h.pools, dst)
+        moved = n
+        if self.spec_active and h.draft_pools is not None \
+                and h.draft_cached > 0:
+            nd = next(iter(h.draft_pools.values())).shape[1]
+            self.draft_cache = self._scatter_blocks(
+                self.draft_cache, h.draft_pools, dst[:nd])
+            st.draft_cached = h.draft_cached
+            moved += nd
+        else:
+            st.draft_cached = 0
+        self._c["migrated_blocks"].inc(moved)
+        self._admit_step.setdefault(st.req.rid, self._steps)
+        return True
+
+    def _gather_blocks(self, pools, blocks: list[int]) -> dict:
+        """Host-side bytes of ``blocks`` from each pool entry that uses
+        block addressing — one batched transfer (blocks are pool axis 1,
+        matching ``_cow_impl``)."""
+        idx = np.asarray(blocks, np.int32)
+        return jax.device_get({name: pools[name][:, idx]
+                               for name in _POOL_KEYS if name in pools})
+
+    def _scatter_blocks(self, pools, vals: dict, blocks: list[int]):
+        """Write migrated block bytes into this engine's pools at the
+        freshly-imported block ids (eager `.at[].set`; the arrays feed
+        the next jitted step like any other pool update)."""
+        idx = jnp.asarray(np.asarray(blocks, np.int32))
+        out = dict(pools)
+        for name, v in vals.items():
+            if name in out:
+                out[name] = out[name].at[:, idx].set(jnp.asarray(v))
+        return out
 
     def _dispatch_decode(self, plan, spec_k, fetch, spec_meta, prev=None):
         """Build the fixed-shape decode batch and launch either the plain
@@ -1747,5 +2021,6 @@ class Engine:
             "requests_shed": d["requests_shed"],
             "audit_violations": d["audit_violations"],
             "callback_errors": d["callback_errors"],
+            "migrated_blocks": d["migrated_blocks"],
         }
         return out, stats

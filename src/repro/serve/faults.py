@@ -34,6 +34,16 @@ Fault kinds (see DESIGN.md §14 for how the engine recovers from each):
   - ``crash``: raise :class:`CrashError` at the very start of step K —
     the simulated hard host crash that snapshot/restore tests recover
     from.
+
+Cluster-scoped kinds (consumed by ``repro.serve.cluster``, not the
+engine; ``rid`` selects the *replica* index instead of a request):
+
+  - ``replica_kill``: the cluster kills replica ``rid`` at cluster tick
+    ``step`` — the crash-at-step-K fault at the replica granularity.
+    Failover re-homes its backlog and running state onto survivors.
+  - ``heartbeat_stall``: replica ``rid`` stops stepping for
+    ``hold_steps`` cluster ticks without raising, so the cluster's
+    step-heartbeat health check must detect and evict it.
 """
 from __future__ import annotations
 
@@ -43,7 +53,7 @@ from collections import Counter
 from typing import Sequence
 
 KINDS = ("alloc_hold", "sync_error", "slow_step", "callback_error",
-         "crash")
+         "crash", "replica_kill", "heartbeat_stall")
 
 
 class FaultError(RuntimeError):
@@ -63,7 +73,10 @@ class Fault:
     fires when the engine step counter equals it; otherwise each
     eligible opportunity fires with probability ``rate``.  ``times``
     bounds total firings of this spec.  ``rid >= 0`` restricts
-    per-request kinds (``callback_error``) to that request id.
+    per-request kinds (``callback_error``) to that request id; for the
+    cluster-scoped kinds (``replica_kill`` / ``heartbeat_stall``) the
+    same field selects the target *replica* index and ``step`` counts
+    cluster ticks.
     """
 
     kind: str
@@ -72,8 +85,10 @@ class Fault:
     times: int = 1
     blocks: int = 0          # alloc_hold: 0 = half of currently-free
     hold_steps: int = 2      # alloc_hold: steps until blocks release
+    #                          (heartbeat_stall: stalled cluster ticks)
     delay_s: float = 0.002   # slow_step: injected stall
     rid: int = -1            # callback_error: target request
+    #                          (cluster kinds: target replica index)
 
     def __post_init__(self):
         if self.kind not in KINDS:

@@ -327,6 +327,56 @@ class PagedCache:
         §13.  Pure query, no allocation."""
         return max(0, self.blocks_for(n_tokens) - len(self._owned[slot]))
 
+    # ----- block migration (DESIGN.md §15) -----
+    def export_slot(self, slot: int, n_tokens: int
+                    ) -> tuple[list[int], list[int]]:
+        """Export a slot's block addressing for migration to another
+        cache: the block ids covering its first ``n_tokens`` tokens (in
+        table order — the engine gathers their pool bytes at these ids)
+        and the committed hash chain over the exported *full* blocks, so
+        the importer can re-register the content in its own prefix index
+        (the prefix becomes aliasable on the destination even though it
+        was written on another replica/shard — the migration transport
+        that makes cross-shard prefix aliases legal).  Read-only."""
+        n = self.blocks_for(n_tokens)
+        blocks = self._owned[slot][:n]
+        assert len(blocks) == n, \
+            f"slot {slot} owns {len(blocks)} blocks < {n} exported"
+        return blocks, self._chain[slot][:n]
+
+    def import_slot(self, slot: int, n_blocks: int, chain: list[int],
+                    n_tokens: int = 0) -> list[int]:
+        """Migration import: allocate fresh blocks for an *empty* slot to
+        receive ``n_blocks`` exported blocks (plus growth headroom to
+        cover ``n_tokens``, so a post-import ``ensure`` cannot fail
+        halfway), wire up its table, and adopt the exported hash chain —
+        re-registering each full block in this cache's prefix index under
+        the destination slot's home shard (skipping hashes already
+        present: dedup keeps the first registration, exactly like
+        ``commit``).  Atomic: the single ``alloc`` either satisfies the
+        whole request or raises OutOfBlocks having mutated nothing.
+        Returns the destination block ids for ``n_blocks`` (the engine
+        scatters the migrated pool bytes there)."""
+        assert not self._owned[slot], "import_slot on a non-empty slot"
+        total = max(n_blocks, self.blocks_for(n_tokens))
+        if total > self.max_blocks_per_seq:
+            raise OutOfBlocks(
+                f"{total} blocks > per-seq capacity {self.max_blocks_per_seq}")
+        new = self.allocator.alloc(total)
+        self._owned[slot] = new
+        self.tables[slot, :total] = new
+        chain = list(chain[:n_blocks])
+        if self.prefix_caching:
+            self._chain[slot] = chain
+            if not self.admission_paused:
+                home = self.shard_of(slot)
+                for h, b in zip(chain, new):
+                    if h not in self._block_of and b not in self._hash_of:
+                        self._block_of[h] = b
+                        self._hash_of[b] = h
+                        self._home_of[b] = home
+        return new[:n_blocks]
+
     # ----- prefix caching -----
     def _forget_block(self, block: int) -> None:
         h = self._hash_of.pop(block)

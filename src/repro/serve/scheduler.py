@@ -195,6 +195,33 @@ class FCFSScheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
+    # ----- backlog adoption (cluster failover; DESIGN.md §15) -----
+    def adopt_waiting(self, st: RequestState, front: bool = False) -> None:
+        """Splice a re-homed request into the waiting queue.  ``front``
+        preserves a preemption-like priority (the request already waited
+        its turn on the dead replica); the default appends in arrival
+        order, matching how the cluster replays a salvaged backlog."""
+        assert st.slot == -1 and not st.done
+        if front:
+            self.waiting.appendleft(st)
+        else:
+            self.waiting.append(st)
+
+    def adopt_running(self, st: RequestState,
+                      slot: int | None = None) -> int:
+        """Seat a migrated request directly into a free slot (its blocks
+        were just imported by ``PagedCache.import_slot``) and return the
+        slot.  The engine pre-picks the slot (``_pick_slot``) so it can
+        import the pool bytes first; this only performs the queue
+        transition ``admit`` would have."""
+        if slot is None:
+            slot = self._pick_slot()
+        assert slot in self._free_slots, f"slot {slot} is not free"
+        self._free_slots.remove(slot)
+        st.slot = slot
+        self.running.append(st)
+        return slot
+
     def drop_waiting(self, st: RequestState) -> None:
         """Retire a not-yet-admitted request (cancellation / deadline
         expiry before admission): straight to finished, no slot or

@@ -127,17 +127,41 @@ def save(path: str, snap: dict) -> None:
 
 
 def load(path: str) -> dict:
+    """Read + validate a snapshot file.  Every malformed-file mode —
+    wrong magic, truncated length/header/body, corrupt JSON, version
+    skew — raises ValueError *before* any engine state is touched, so a
+    failed restore leaves the target engine exactly as it was."""
     with open(path, "rb") as f:
         magic = f.read(len(MAGIC))
         if magic != MAGIC:
             raise ValueError(f"{path}: not a serve snapshot "
                              f"(magic {magic!r})")
-        (hlen,) = struct.unpack("<I", f.read(4))
-        header = json.loads(f.read(hlen))
+        raw = f.read(4)
+        if len(raw) != 4:
+            raise ValueError(f"{path}: truncated snapshot (no header "
+                             f"length)")
+        (hlen,) = struct.unpack("<I", raw)
+        hraw = f.read(hlen)
+        if len(hraw) != hlen:
+            raise ValueError(f"{path}: truncated snapshot header "
+                             f"({len(hraw)}/{hlen} bytes)")
+        try:
+            header = json.loads(hraw)
+        except ValueError as e:
+            raise ValueError(f"{path}: corrupt snapshot header: {e}") \
+                from e
+        if not isinstance(header, dict):
+            raise ValueError(f"{path}: corrupt snapshot header "
+                             f"(not an object)")
         if header.get("version") != VERSION:
             raise ValueError(f"{path}: snapshot version "
                              f"{header.get('version')} != {VERSION}")
-        body = pickle.load(f)
+        try:
+            body = pickle.load(f)
+        except (pickle.UnpicklingError, EOFError, AttributeError,
+                MemoryError) as e:
+            raise ValueError(f"{path}: truncated/corrupt snapshot body: "
+                             f"{e}") from e
     return {"header": header, **body}
 
 
@@ -229,6 +253,77 @@ def restore_into(engine, snap: dict) -> None:
             engine.draft_cache = jax.tree_util.tree_map(
                 jnp.asarray, snap["draft_pools"])
     cache.check()                       # restored state must audit clean
+
+
+# ----- partial (per-request) capture: failover handoff (§15) -----
+
+HANDOFF_FORMAT = "repro-serve-handoff"
+
+
+def capture_requests(engine, rids=None) -> dict:
+    """Capture a serializable handoff bundle for a subset of requests.
+
+    Unlike :func:`capture` this does not freeze the whole engine — it
+    exports individual unfinished requests (running ones with their KV
+    blocks when the engine supports block handoff) so a cluster, or a
+    cold process, can re-home exactly those sequences onto another
+    engine via :func:`adopt_requests`.  ``rids=None`` means every
+    unfinished request.  The source engine is left untouched (pass the
+    rids through ``Engine.export_request(remove=True)`` yourself when
+    you want them gone).  ``on_token`` callbacks are not serializable
+    and are dropped.
+    """
+    sched = engine.scheduler
+    if rids is None:
+        rids = [s.req.rid for s in list(sched.running) +
+                list(sched.waiting) if not s.done]
+    reqs = []
+    for rid in rids:
+        h = engine.export_request(rid)
+        reqs.append({
+            "state": h.state,
+            "clocks": dict(h.clocks),
+            "deadline": h.deadline,
+            "num_cached": h.num_cached,
+            "draft_cached": h.draft_cached,
+            "chain": list(h.chain),
+            "pools": h.pools,
+            "draft_pools": h.draft_pools,
+        })
+    header = {
+        "format": HANDOFF_FORMAT,
+        "version": VERSION,
+        "model": engine.model.cfg.name,
+        "handoff_key": list(engine.handoff_key()),
+    }
+    return copy.deepcopy({"header": header, "requests": reqs})
+
+
+def adopt_requests(engine, snap: dict) -> list[int]:
+    """Adopt every request from a :func:`capture_requests` bundle.
+
+    Returns the new rids in bundle order.  Block payloads are imported
+    when the destination's ``handoff_key`` matches; otherwise each
+    request falls back to waiting-with-recompute (still byte-identical
+    at temperature 0)."""
+    from repro.serve.engine import SequenceHandoff
+    h = snap["header"]
+    if h.get("format") != HANDOFF_FORMAT:
+        raise ValueError("not a serve handoff bundle")
+    if h.get("version") != VERSION:
+        raise ValueError(f"handoff version {h.get('version')} != "
+                         f"{VERSION}")
+    key = tuple(h["handoff_key"])
+    out = []
+    # deep-copy so the bundle stays reusable after the engine starts
+    # mutating the adopted RequestStates
+    for r in copy.deepcopy(snap["requests"]):
+        out.append(engine.adopt(SequenceHandoff(
+            state=r["state"], clocks=r["clocks"], key=key,
+            num_cached=r["num_cached"], draft_cached=r["draft_cached"],
+            chain=r["chain"], pools=r["pools"],
+            draft_pools=r["draft_pools"], deadline=r["deadline"])))
+    return out
 
 
 def restore_engine(snap: dict, model, params, draft_model=None,

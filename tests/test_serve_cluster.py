@@ -1,0 +1,451 @@
+"""Replicated serving chaos suite (repro.serve.cluster; DESIGN.md §15).
+
+The contract under test: a :class:`Cluster` of engine replicas survives
+replica death and rolling restarts without changing a single output
+byte.  Every test drives a request set once on a single engine for a
+reference, then on a cluster under a failure scenario, and asserts:
+
+  - every in-flight request completes on survivors with tokens
+    **byte-identical** to the single-engine run (per-request outputs
+    are batch- and placement-independent at temperature 0);
+  - zero leaked or held blocks on every surviving allocator, and the
+    full conservation oracle ``PagedCache.check()`` passes;
+  - the cluster's health/failover counters prove the scenario actually
+    happened (``fired``, ``failovers``, ``migrated_blocks``).
+
+``CHAOS_SEED_OFFSET`` (CI failover lane matrix) shifts injector seeds,
+mirroring tests/test_serve_chaos.py.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build
+from repro.serve import (AuditViolation, Cluster, ClusterConfig, Engine,
+                         Fault, FaultInjector, OutOfBlocks, PagedCache,
+                         ServeConfig, adopt_requests, capture_requests)
+
+rng = np.random.default_rng(37)
+SEED = int(os.environ.get("CHAOS_SEED_OFFSET", "0"))
+
+
+@pytest.fixture(scope="module")
+def mp(key):
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    m = build(cfg)
+    return m, m.init(key)
+
+
+def _prompts(cfg, n=6, base=10):
+    return [[int(t) for t in rng.integers(0, cfg.vocab_size,
+                                          base - (i % 4))]
+            for i in range(n)]
+
+
+def _cfg(**kw):
+    kw.setdefault("max_seqs", 3)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("num_blocks", 48)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("chunk_size", 8)
+    kw.setdefault("audit_level", "full")
+    return ServeConfig(**kw)
+
+
+def _reference(mp, prompts, gen=8, **cfg_kw):
+    """Single-engine oracle: {submission index: tokens}."""
+    m, params = mp
+    eng = Engine(m, params, _cfg(**cfg_kw))
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=gen)
+    out, _ = eng.run()
+    return {i: tuple(out[i].tokens) for i in sorted(out)}
+
+
+def _drive(cluster, rids, max_ticks=500):
+    """Run a cluster dry and assert the shared postconditions: bounded
+    ticks, no leaks on survivors, conservation audit clean.  Returns
+    {submission index: (tokens, finish_reason)}."""
+    res, stats = cluster.run(max_ticks=max_ticks)
+    assert not cluster.has_work, "cluster deadlocked"
+    cluster.check()
+    for r in cluster.replicas:
+        if r.state == "alive":
+            a = r.engine.cache_host.allocator
+            assert a.num_live == 0, f"{r.name}: leaked live blocks"
+            assert a.num_held == 0, f"{r.name}: leaked held blocks"
+    return {rids.index(rid): (tuple(rec.tokens), rec.finish_reason)
+            for rid, rec in res.items()}, stats
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: kill a replica mid-decode, outputs byte-identical
+# ---------------------------------------------------------------------------
+
+def test_kill_replica_mid_decode_byte_identical(mp):
+    """Replica 0 dies at cluster tick 4 (requests mid-decode on both
+    replicas): every request — including replica 0's running set and
+    backlog — completes on the survivor with single-engine tokens."""
+    m, params = mp
+    prompts = _prompts(m.cfg)
+    ref = _reference(mp, prompts)
+
+    fi = FaultInjector([Fault("replica_kill", step=4, rid=0)], seed=SEED)
+    cl = Cluster([Engine(m, params, _cfg()), Engine(m, params, _cfg())],
+                 faults=fi)
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    got, stats = _drive(cl, rids)
+    assert fi.fired["replica_kill"] == 1
+    assert stats["failovers"] == 1 and stats["alive"] == 1
+    assert {i: v for i, (v, _) in got.items()} == ref
+    assert all(reason == "length" for _, reason in got.values())
+
+
+def test_block_migration_resumes_without_recompute(mp):
+    """When the survivor has free slots, a killed replica's running
+    requests migrate their KV(+scale) blocks and resume pure decode:
+    the survivor sees ZERO prefill tokens and byte-identical output."""
+    m, params = mp
+    prompts = _prompts(m.cfg, n=2, base=12)
+    ref = _reference(mp, prompts, gen=10)
+
+    engines = [Engine(m, params, _cfg()), Engine(m, params, _cfg())]
+    fi = FaultInjector([Fault("replica_kill", step=6, rid=0)], seed=SEED)
+    cl = Cluster(engines, faults=fi)
+    # both requests on replica 0 so the survivor stays empty
+    rids = [engines[0].add_request(p, max_new_tokens=10) for p in prompts]
+    got, stats = _drive(cl, rids)
+    assert {i: v for i, (v, _) in got.items()} == ref
+    assert stats["migrated_blocks"] > 0
+    assert engines[1]._c["prefill_tokens"].value == 0, \
+        "migrated requests re-prefilled (recompute instead of handoff)"
+    assert engines[1]._c["decode_tokens"].value > 0
+
+
+def test_heartbeat_stall_declares_dead_and_fails_over(mp):
+    """A replica that stops stepping (without raising) while holding
+    work is declared dead by the step-heartbeat and failed over."""
+    m, params = mp
+    prompts = _prompts(m.cfg, n=4)
+    ref = _reference(mp, prompts)
+
+    fi = FaultInjector([Fault("heartbeat_stall", step=3, rid=0,
+                              hold_steps=1000)], seed=SEED)
+    cl = Cluster([Engine(m, params, _cfg()), Engine(m, params, _cfg())],
+                 ClusterConfig(heartbeat_timeout=4), faults=fi)
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    got, stats = _drive(cl, rids)
+    assert fi.fired["heartbeat_stall"] == 1
+    assert cl.replicas[0].state == "dead"
+    assert stats["failovers"] == 1
+    assert {i: v for i, (v, _) in got.items()} == ref
+
+
+def test_stall_shorter_than_timeout_recovers(mp):
+    """A transient stall inside the heartbeat window is NOT a failure:
+    the replica resumes stepping and nothing fails over."""
+    m, params = mp
+    prompts = _prompts(m.cfg, n=4)
+    ref = _reference(mp, prompts)
+
+    fi = FaultInjector([Fault("heartbeat_stall", step=2, rid=0,
+                              hold_steps=3)], seed=SEED)
+    cl = Cluster([Engine(m, params, _cfg()), Engine(m, params, _cfg())],
+                 ClusterConfig(heartbeat_timeout=8), faults=fi)
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    got, stats = _drive(cl, rids)
+    assert fi.fired["heartbeat_stall"] == 1
+    assert stats["failovers"] == 0 and stats["alive"] == 2
+    assert {i: v for i, (v, _) in got.items()} == ref
+
+
+def test_fatal_step_error_kills_replica(mp):
+    """An AuditViolation escaping a replica's step (untrusted memory)
+    kills that replica; its requests finish elsewhere byte-identically."""
+    m, params = mp
+    prompts = _prompts(m.cfg, n=4)
+    ref = _reference(mp, prompts)
+
+    engines = [Engine(m, params, _cfg()), Engine(m, params, _cfg())]
+    cl = Cluster(engines)
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    for _ in range(3):
+        cl.step()
+    real_step = engines[0].step
+
+    def poisoned_step():
+        engines[0].step = real_step     # fire once
+        raise AuditViolation("injected: cache state untrusted")
+
+    engines[0].step = poisoned_step
+    got, stats = _drive(cl, rids)
+    assert cl.replicas[0].state == "dead"
+    assert stats["failovers"] == 1
+    assert {i: v for i, (v, _) in got.items()} == ref
+
+
+# ---------------------------------------------------------------------------
+# Rolling restart
+# ---------------------------------------------------------------------------
+
+def test_rolling_restart_zero_failed_requests(mp):
+    """Restart each replica in turn mid-serve: drain (bounded), re-home
+    the backlog, snapshot/restore round-trip — zero failed requests and
+    byte-identical outputs."""
+    m, params = mp
+    prompts = _prompts(m.cfg)
+    ref = _reference(mp, prompts)
+
+    cl = Cluster([Engine(m, params, _cfg()), Engine(m, params, _cfg())],
+                 ClusterConfig(drain_timeout_s=30.0))
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    for _ in range(3):
+        cl.step()
+    cl.rolling_restart()
+    assert all(r.state == "alive" for r in cl.replicas)
+    got, stats = _drive(cl, rids)
+    assert stats["failovers"] == 0
+    assert {i: v for i, (v, _) in got.items()} == ref
+    assert all(reason in ("length", "stop") for _, reason in got.values())
+
+
+def test_restart_single_replica_keeps_backlog(mp):
+    """Restarting the only replica has no survivors to migrate to: the
+    backlog rides the snapshot/restore round-trip instead."""
+    m, params = mp
+    prompts = _prompts(m.cfg, n=5)
+    ref = _reference(mp, prompts)
+
+    cl = Cluster([Engine(m, params, _cfg())])
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    cl.step()
+    cl.restart(0)
+    assert cl.replicas[0].state == "alive"
+    got, stats = _drive(cl, rids)
+    assert {i: v for i, (v, _) in got.items()} == ref
+
+
+# ---------------------------------------------------------------------------
+# Retry budgets and incompatible survivors
+# ---------------------------------------------------------------------------
+
+def test_retry_budget_exhausted_fails_cleanly(mp):
+    """With a zero retry budget, failover cannot re-home: the dead
+    replica's requests fail with finish_reason "error" instead of
+    crashing the cluster, and the survivor still serves its own."""
+    m, params = mp
+    prompts = _prompts(m.cfg, n=4)
+
+    engines = [Engine(m, params, _cfg()), Engine(m, params, _cfg())]
+    fi = FaultInjector([Fault("replica_kill", step=3, rid=0)], seed=SEED)
+    cl = Cluster(engines, ClusterConfig(retry_budget=0), faults=fi)
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    got, stats = _drive(cl, rids)
+    assert stats["failovers"] == 1
+    reasons = {reason for _, reason in got.values()}
+    assert "error" in reasons, "budget-exhausted requests must fail"
+    assert "length" in reasons, "survivor's own requests must finish"
+    assert len(got) == len(prompts), "every request must get a result"
+
+
+def test_mixed_tier_cluster_rehomes_same_model_only(mp):
+    """Dense and pruned tiers are both valid members, but failover only
+    re-homes onto same-model survivors (byte parity needs identical
+    weights): with only a pruned survivor, dense requests fail
+    cleanly rather than silently change models."""
+    from repro.core.pruner import prune_model
+    m, params = mp
+    pr = prune_model(m, params, 0.5, criterion="l1")
+    pm, pp = build(pr.cfg), pr.params
+    prompts = _prompts(m.cfg, n=2)
+
+    engines = [Engine(m, params, _cfg()), Engine(pm, pp, _cfg())]
+    fi = FaultInjector([Fault("replica_kill", step=3, rid=0)], seed=SEED)
+    cl = Cluster(engines, faults=fi)
+    rids = [engines[0].add_request(p, max_new_tokens=8) for p in prompts]
+    got, stats = _drive(cl, rids)
+    assert stats["failovers"] == 1
+    assert all(reason == "error" for _, reason in got.values())
+
+
+# ---------------------------------------------------------------------------
+# Handoff primitives: engine-level export/adopt, partial snapshot bundle
+# ---------------------------------------------------------------------------
+
+def test_export_adopt_roundtrip_partial_bundle(mp):
+    """capture_requests/adopt_requests (snapshot.py): a mid-run engine's
+    live requests move to a fresh engine through the serializable bundle
+    and finish byte-identically, without recompute for running ones."""
+    m, params = mp
+    prompts = _prompts(m.cfg, n=4)
+    ref = _reference(mp, prompts)
+
+    e1 = Engine(m, params, _cfg())
+    for p in prompts:
+        e1.add_request(p, max_new_tokens=8)
+    for _ in range(4):
+        e1.step()
+    done = {r: (tuple(rec.tokens), rec.finish_reason)
+            for r, rec in e1.pop_finished().items()}
+    bundle = capture_requests(e1)
+    assert bundle["header"]["format"] == "repro-serve-handoff"
+    assert any(r["pools"] is not None for r in bundle["requests"]), \
+        "running requests should carry pool bytes"
+
+    e2 = Engine(m, params, _cfg())
+    new_rids = adopt_requests(e2, bundle)
+    order = [r["state"].req.rid for r in bundle["requests"]]
+    out, _ = e2.run()
+    got = dict(done)
+    for old, new in zip(order, new_rids):
+        got[old] = (tuple(out[new].tokens), out[new].finish_reason)
+    assert {i: v for i, (v, _) in got.items()} == ref
+
+
+def test_adopt_rejects_oversized_request(mp):
+    """A handoff that cannot fit the adopter at all raises ValueError
+    (the cluster then fails it instead of wedging)."""
+    m, params = mp
+    e1 = Engine(m, params, _cfg(max_len=96, num_blocks=96))
+    e1.add_request(list(range(4)), max_new_tokens=60)
+    h = e1.export_request(e1.scheduler.waiting[0].req.rid)
+    e2 = Engine(m, params, _cfg())      # max_len 48 < 64 needed
+    with pytest.raises(ValueError, match="capacity"):
+        e2.adopt(h)
+
+
+# ---------------------------------------------------------------------------
+# kv_cache migration primitive
+# ---------------------------------------------------------------------------
+
+def test_import_slot_atomic_and_reregisters_prefix():
+    """import_slot allocates atomically (headroom included), rebinds the
+    table, and re-registers the chain under the destination's home shard
+    — and a too-large import raises with NOTHING mutated."""
+    src = PagedCache(max_seqs=2, num_blocks=16, block_size=4,
+                     max_blocks_per_seq=4, prefix_caching=True)
+    toks = tuple(range(8))              # two full blocks
+    src.ensure(0, 8)
+    src.commit(0, toks)
+    blocks, chain = src.export_slot(0, 8)
+    assert len(blocks) == 2 and len(chain) == 2
+
+    dst = PagedCache(max_seqs=2, num_blocks=16, block_size=4,
+                     max_blocks_per_seq=4, prefix_caching=True)
+    new = dst.import_slot(1, len(blocks), chain, n_tokens=9)
+    assert len(new) == 2
+    assert len(dst._owned[1]) == 3      # +1 headroom block for token 9
+    assert dst._chain[1] == chain
+    for h, b in zip(chain, new):
+        assert dst._block_of[h] == b and dst._hash_of[b] == h
+    dst.check()
+    dst.ensure(1, 9)                    # headroom means no extra alloc
+    assert len(dst._owned[1]) == 3
+    dst.release(1)
+    dst.check()
+
+    # atomicity: an import that cannot fit leaves the cache untouched
+    tiny = PagedCache(max_seqs=2, num_blocks=4, block_size=4,
+                      max_blocks_per_seq=4, prefix_caching=True)
+    tiny.ensure(0, 8)                   # 2 of 3 usable blocks taken
+    with pytest.raises(OutOfBlocks):
+        tiny.import_slot(1, 2, chain, n_tokens=9)
+    assert tiny._owned[1] == [] and not tiny._chain[1]
+    tiny.check()
+
+
+def test_cross_replica_prefix_alias_after_migration(mp):
+    """Re-registered chains make cross-replica prefix aliases legal: a
+    NEW request sharing the migrated request's prompt prefix hits the
+    survivor's prefix cache."""
+    m, params = mp
+    prompt = [int(t) for t in rng.integers(0, m.cfg.vocab_size, 12)]
+    engines = [Engine(m, params, _cfg()), Engine(m, params, _cfg())]
+    fi = FaultInjector([Fault("replica_kill", step=6, rid=0)], seed=SEED)
+    cl = Cluster(engines, faults=fi)
+    rids = [engines[0].add_request(prompt, max_new_tokens=10)]
+    got, stats = _drive(cl, rids)
+    assert stats["migrated_blocks"] > 0
+    surv = engines[1]
+    hits0 = surv.cache_host.prefix_hits
+    surv.add_request(prompt, max_new_tokens=4)
+    out, _ = surv.run()
+    assert surv.cache_host.prefix_hits > hits0, \
+        "migrated chain did not serve a prefix hit"
+    surv.cache_host.check()
+
+
+# ---------------------------------------------------------------------------
+# Bounded drain (satellite: drain deadline)
+# ---------------------------------------------------------------------------
+
+def test_drain_deadline_force_preempts_to_waiting(mp):
+    """drain(timeout) past its deadline force-preempts stragglers back
+    to the waiting queue with generated tokens preserved; a snapshot
+    round-trip then resumes them byte-identically."""
+    from repro.serve import restore_into
+    m, params = mp
+    prompts = _prompts(m.cfg, n=3)
+    ref = _reference(mp, prompts, gen=16)
+
+    eng = Engine(m, params, _cfg(drain_timeout_s=1e-6))
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=16)
+    for _ in range(4):
+        eng.step()
+    drained = eng.drain()               # deadline already expired
+    assert not eng.scheduler.running, "stragglers must be preempted"
+    preempted = list(eng.scheduler.waiting)
+    assert preempted, "expected force-preempted requests"
+    assert any(s.generated for s in preempted), \
+        "preempted requests must keep generated tokens"
+    a = eng.cache_host.allocator
+    assert a.num_live == 0 and a.num_held == 0
+    eng.cache_host.check()
+
+    snap = eng.snapshot()
+    eng2 = Engine(m, params, _cfg(drain_timeout_s=1e-6))
+    restore_into(eng2, snap)
+    out, _ = eng2.run()
+    got = {r: tuple(rec.tokens) for r, rec in drained.items()}
+    got.update({r: tuple(rec.tokens) for r, rec in out.items()})
+    assert got == ref
+
+
+def test_drain_unbounded_still_completes(mp):
+    """timeout 0 keeps the legacy unbounded drain."""
+    m, params = mp
+    eng = Engine(m, params, _cfg())
+    prompts = _prompts(m.cfg, n=3)
+    ref = _reference(mp, prompts)
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=8)
+    eng.step()
+    drained = eng.drain(timeout_s=0)
+    assert not eng.scheduler.running
+    got = {r: tuple(rec.tokens) for r, rec in drained.items()}
+    # anything still waiting resumes under run() after reset of draining
+    assert all(got[r] == ref[r] for r in got)
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+def test_submit_falls_through_backpressure(mp):
+    """A replica refusing admission (max_waiting) is skipped; the
+    request lands on the next candidate instead of erroring."""
+    m, params = mp
+    engines = [Engine(m, params, _cfg(max_waiting=1)),
+               Engine(m, params, _cfg(max_waiting=1))]
+    cl = Cluster(engines)
+    prompts = _prompts(m.cfg, n=2)
+    r0 = cl.submit(prompts[0], max_new_tokens=4)
+    r1 = cl.submit(prompts[1], max_new_tokens=4)
+    # one on each replica despite both queues capping at 1
+    assert len(engines[0].scheduler.waiting) == 1
+    assert len(engines[1].scheduler.waiting) == 1
+    got, _ = _drive(cl, [r0, r1])
+    assert len(got) == 2

@@ -37,7 +37,8 @@ import random
 
 import pytest
 
-from repro.serve import (FCFSScheduler, OutOfBlocks, PagedCache, Request)
+from repro.serve import (FCFSScheduler, Fault, FaultInjector, OutOfBlocks,
+                         PagedCache, Request)
 from repro.serve.kv_cache import BlockAllocator
 
 try:
@@ -115,7 +116,16 @@ def drive_allocator(seed: int, steps: int = 300) -> None:
 # Driver 2: scheduler + cache under a fake engine loop
 # ---------------------------------------------------------------------------
 
-def drive_scheduler(seed: int, rounds: int = 120) -> None:
+def drive_scheduler(seed: int, rounds: int = 120,
+                    fault_plan: tuple = ()) -> None:
+    """``fault_plan`` folds fault injection into the property driver:
+    each ``(round, fraction, hold_rounds)`` entry sequesters that
+    fraction of the currently-free blocks via the allocator's held
+    state at the given round, releasing them ``hold_rounds`` rounds
+    later — so the conservation oracle (which now includes held) and
+    every grow/preempt path are exercised under induced exhaustion.
+    A plan-time OutOfBlocks while holds are live hands them back (the
+    engine's ``_unjam``) instead of ending the run."""
     rng = random.Random(seed)
     bs = rng.choice([2, 4])
     max_seqs = rng.randint(1, 4)
@@ -136,6 +146,12 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
     sc_stamp: dict[int, int] = {}
     clock = [0]
 
+    # injected allocator-pressure holds: (release_round, blocks)
+    held: list[tuple[int, list[int]]] = []
+    plan_at: dict[int, list[tuple[float, int]]] = {}
+    for r, frac, hold_rounds in fault_plan:
+        plan_at.setdefault(r % rounds, []).append((frac, hold_rounds))
+
     def write_blocks(slot, lo, hi):
         """Simulate _scatter_kv over token positions [lo, hi): the engine
         stamps a block's KV bytes and its scales in the same scatter."""
@@ -146,7 +162,18 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
             kv_stamp[b] = clock[0]
             sc_stamp[b] = clock[0]
 
-    for _ in range(rounds):
+    for rnd in range(rounds):
+        for exp, blocks in list(held):     # expire due holds first
+            if rnd >= exp:
+                cache.allocator.unhold(blocks)
+                held.remove((exp, blocks))
+                cache.check()
+        for frac, hold_rounds in plan_at.get(rnd, ()):
+            n = min(int(cache.allocator.num_free * frac) or 1,
+                    cache.allocator.num_free)
+            if n > 0:
+                held.append((rnd + hold_rounds, cache.allocator.hold(n)))
+                cache.check()
         if rng.random() < 0.4:
             # vocab {0,1} prompts: prefix collisions (and so sharing, COW
             # and eviction) are the common case, not the rare one
@@ -160,6 +187,14 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
         try:
             plan = sched.plan_step(chunk, budget, spec_k)
         except OutOfBlocks:
+            if held:
+                # injected exhaustion: hand the holds back (the engine's
+                # _unjam) and keep driving
+                for _, blocks in held:
+                    cache.allocator.unhold(blocks)
+                held.clear()
+                cache.check()
+                continue
             # a lone request legitimately outgrew an undersized pool
             cache.check()
             return
@@ -213,19 +248,70 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
                     s.stopped = True
         sched.commit_progress()
         cache.check()
-        # conservation, stated exactly as the issue demands:
+        # conservation, stated exactly as the issue demands (held blocks
+        # are first-class state, not a leak):
         alloc = cache.allocator
-        assert alloc.num_free + alloc.num_live + alloc.num_cached == usable
+        assert alloc.num_free + alloc.num_live + alloc.num_cached \
+            + alloc.num_held == usable
         # scale lockstep: no host transition (alias, COW, truncate,
         # release, eviction) can make the scale pool disagree with the
         # KV pool about any block — addressing is shared, so the stamps
         # can only diverge if a path moved KV without its scales
         assert kv_stamp == sc_stamp
-    # drain what's left so release paths run too
+    # drain what's left so release paths run too; holds must all expire
+    for _, blocks in held:
+        cache.allocator.unhold(blocks)
     for s in list(sched.running):
         s.stopped = True
     sched.retire_finished()
     cache.check()
+    assert cache.allocator.num_held == 0
+
+
+# ---------------------------------------------------------------------------
+# Driver 3: the real engine under a strategy-chosen fault schedule
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_ref(key):
+    """A real (reduced) engine plus its cached fault-free reference —
+    module-scoped so hypothesis examples reuse one compile."""
+    import numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build
+    from repro.serve import Engine, ServeConfig
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    m = build(cfg)
+    eng = Engine(m, m.init(key),
+                 ServeConfig(max_seqs=3, block_size=4, num_blocks=24,
+                             max_len=48, chunk_size=8,
+                             audit_level="full"))
+    prng = np.random.default_rng(53)
+    prompts = [[int(t) for t in prng.integers(0, cfg.vocab_size,
+                                              10 - (i % 3))]
+               for i in range(4)]
+    return eng, prompts, _drive_engine(eng, prompts)
+
+
+def _drive_engine(eng, prompts, faults=None, gen=6):
+    """Fault-free and faulted runs share one drive; the crash-safety
+    postconditions (bounded steps, zero live/held, conservation audit)
+    are asserted on every example."""
+    eng.reset()
+    eng.faults = faults
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=gen)
+    n = 0
+    while eng.scheduler.has_work or eng.pending_step:
+        eng.step()
+        n += 1
+        assert n <= 400, "no progress: deadlock under fault schedule"
+    eng.faults = None
+    a = eng.cache_host.allocator
+    assert a.num_live == 0 and a.num_held == 0
+    eng.cache_host.check()
+    return {r: (tuple(rec.tokens), rec.finish_reason)
+            for r, rec in eng.pop_finished().items()}
 
 
 # ---------------------------------------------------------------------------
@@ -233,15 +319,52 @@ def drive_scheduler(seed: int, rounds: int = 120) -> None:
 # ---------------------------------------------------------------------------
 
 if HAVE_HYPOTHESIS:
+    # a strategy-chosen fault schedule: each entry holds a fraction of
+    # the free pool at a round and releases it a few rounds later
+    _fault_plans = st.lists(
+        st.tuples(st.integers(0, 119),        # round the hold lands
+                  st.floats(0.1, 1.0),        # fraction of free to hold
+                  st.integers(1, 5)),         # rounds until release
+        max_size=4)
+
     @given(st.integers(0, 2**16))
     @settings(max_examples=_MAX_EX, deadline=None)
     def test_allocator_state_machine_hypothesis(seed):
         drive_allocator(seed)
 
-    @given(st.integers(0, 2**16))
+    @given(st.integers(0, 2**16), _fault_plans)
     @settings(max_examples=max(int(_MAX_EX * 0.75), 1), deadline=None)
-    def test_scheduler_conservation_hypothesis(seed):
-        drive_scheduler(seed)
+    def test_scheduler_conservation_hypothesis(seed, fault_plan):
+        drive_scheduler(seed, fault_plan=tuple(fault_plan))
+
+    # -- engine-level: hypothesis chooses a *recoverable* fault schedule
+    # (allocator pressure, transient sync errors, straggler steps) and
+    # the run must stay byte-identical to the cached fault-free
+    # reference.  Only recoverable shapes are drawn: sync_error steps
+    # are unique (a lone failure is inside the engine's retry budget),
+    # and slow_step has no deadline to trip.
+    @st.composite
+    def _recoverable_schedules(draw):
+        faults = [Fault("alloc_hold", step=s, blocks=draw(
+                      st.integers(0, 10)),
+                      hold_steps=draw(st.integers(1, 3)))
+                  for s in draw(st.lists(st.integers(0, 20),
+                                         max_size=3))]
+        faults += [Fault("sync_error", step=s)
+                   for s in draw(st.lists(st.integers(0, 20),
+                                          unique=True, max_size=2))]
+        faults += [Fault("slow_step", step=s, delay_s=0.001)
+                   for s in draw(st.lists(st.integers(0, 20),
+                                          max_size=2))]
+        return faults
+
+    @given(_recoverable_schedules())
+    @settings(max_examples=max(_MAX_EX // 8, 3), deadline=None)
+    def test_engine_byte_identical_under_fault_schedule(engine_ref,
+                                                        schedule):
+        eng, prompts, ref = engine_ref
+        fi = FaultInjector(schedule, seed=0)
+        assert _drive_engine(eng, prompts, faults=fi) == ref
 
 
 # ---------------------------------------------------------------------------
@@ -256,6 +379,27 @@ def test_allocator_state_machine(seed):
 @pytest.mark.parametrize("seed", range(20))
 def test_scheduler_conservation(seed):
     drive_scheduler(seed * 104729)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_scheduler_conservation_under_faults(seed):
+    """Fixed fault plans keep the held-block conservation oracle and
+    the unjam path exercised where hypothesis isn't installed."""
+    drive_scheduler(seed * 31337,
+                    fault_plan=((5, 0.5, 3), (40, 1.0, 2), (80, 0.3, 4)))
+
+
+def test_engine_fixed_fault_schedule_byte_identical(engine_ref):
+    """Seeded fallback for the engine-level property: one schedule
+    mixing all three recoverable kinds stays byte-identical."""
+    eng, prompts, ref = engine_ref
+    fi = FaultInjector([Fault("alloc_hold", step=2, blocks=8,
+                              hold_steps=2),
+                        Fault("sync_error", step=4),
+                        Fault("slow_step", step=6, delay_s=0.001)],
+                       seed=0)
+    assert _drive_engine(eng, prompts, faults=fi) == ref
+    assert sum(fi.fired.values()) >= 2
 
 
 def test_cached_blocks_are_reclaimed_lru_first():

@@ -141,6 +141,81 @@ def test_load_rejects_garbage_and_mismatch(mp, tmp_path):
         restore_into(other, snap)
 
 
+def test_load_rejects_truncated_and_corrupt_files(mp, tmp_path):
+    """Every malformed-file mode raises ValueError (never struct.error /
+    JSONDecodeError / pickle internals): truncated length word,
+    truncated header, corrupt JSON, version skew, truncated body."""
+    import json
+    import struct
+
+    eng = _engine(mp)
+    eng.reset()
+    eng.add_request(_prompts(eng.model.cfg)[0], max_new_tokens=4)
+    good = str(tmp_path / "good.rsrv")
+    save_snapshot(eng, good)
+    raw = open(good, "rb").read()
+    (hlen,) = struct.unpack("<I", raw[8:12])
+
+    def write(name, data):
+        p = str(tmp_path / name)
+        with open(p, "wb") as f:
+            f.write(data)
+        return p
+
+    cases = [
+        ("no_len.rsrv", raw[:10], "truncated"),          # cut length word
+        ("no_header.rsrv", raw[:12 + hlen // 2], "truncated"),
+        ("no_body.rsrv", raw[:12 + hlen + 5], "corrupt"),
+        ("bad_json.rsrv",
+         raw[:12] + b"{" * hlen + raw[12 + hlen:], "corrupt"),
+    ]
+    for name, data, match in cases:
+        with pytest.raises(ValueError, match=match):
+            load_snapshot(write(name, data))
+
+    hdr = json.loads(raw[12:12 + hlen])
+    hdr["version"] = snapmod.VERSION + 1
+    enc = json.dumps(hdr, sort_keys=True).encode()
+    skew = raw[:8] + struct.pack("<I", len(enc)) + enc + raw[12 + hlen:]
+    with pytest.raises(ValueError, match="version"):
+        load_snapshot(write("version_skew.rsrv", skew))
+
+    assert load_snapshot(good)["header"]["version"] == snapmod.VERSION
+
+
+def test_failed_restore_leaves_engine_untouched(mp):
+    """restore_into validates config inequality BEFORE reset: a mid-run
+    engine given a mismatched snapshot raises cleanly and then finishes
+    its own run byte-identically — no state was lost."""
+    eng = _engine(mp)
+    prompts = _prompts(eng.model.cfg)
+    eng.reset()
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=6)
+    ref = _finish(eng)
+
+    donor = _engine(mp, block_size=8, max_len=64)
+    donor.reset()
+    bad_snap = donor.snapshot()
+
+    eng.reset()
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=6)
+    for _ in range(3):
+        eng.step()
+    running_before = [s.req.rid for s in eng.scheduler.running]
+    with pytest.raises(ValueError, match="ServeConfig mismatch"):
+        restore_into(eng, bad_snap)
+    wrong_model = _engine(mp)
+    wrong_model.reset()
+    ws = wrong_model.snapshot()
+    ws["header"] = dict(ws["header"], model="other-arch")
+    with pytest.raises(ValueError, match="model"):
+        restore_into(eng, ws)
+    assert [s.req.rid for s in eng.scheduler.running] == running_before
+    assert _finish(eng) == ref
+
+
 def test_temperature_resume_identical(mp):
     """The PRNG key rides the snapshot, so even sampled (temperature>0)
     serving resumes byte-identically."""
