@@ -56,6 +56,16 @@ with per-step invariant auditing on.  Outputs must stay byte-identical
 and ``results/serving_chaos.json`` (+ an optional Chrome trace via
 ``--trace-out``) is uploaded as a CI artifact.
 
+With ``--disagg``, the prefill/decode disaggregation A/B runs
+(DESIGN.md §16): one mixed long-prompt/short-decode Poisson schedule is
+replayed open-loop against a colocated cluster of two mixed replicas
+and against a 1-prefill + 1-decode split cluster, with a single engine
+as the byte-parity oracle.  Decode-class TPOT p50/p99, TTFT and
+goodput land in ``results/serving_disagg.json`` (+ the split run's
+per-role Chrome trace via ``--trace-out``); the disagg-p99-strictly-
+below-colocated assert arms at >= 2 cpus and the armed flag is
+recorded.
+
 With ``--sharded``, the mesh-aware serving section runs (DESIGN.md §10):
 for N in {1, 2, 4} a subprocess is forced to N host-platform devices
 (``XLA_FLAGS=--xla_force_host_platform_device_count=N``; the device count
@@ -685,6 +695,14 @@ def latency_rows(rate: float, out_path: str | None = None,
         traces[name] = tel.trace
 
     sy, an = modes["sync"], modes["async"]
+    # the bubble claim needs host and device work on separate cores:
+    # below 4 the pipeline time-shares and async can only break even,
+    # so the assert arms with the hardware (armed flag in the JSON)
+    bubble_armed = (os.cpu_count() or 1) >= 4
+    if bubble_armed:
+        assert an["bubble_fraction"] < sy["bubble_fraction"], \
+            (f"async bubble {an['bubble_fraction']:.3f} not below sync "
+             f"{sy['bubble_fraction']:.3f} with {os.cpu_count()} cpus")
     ttft, tpot, qwait = sy["ttft_s"], sy["tpot_s"], sy["queue_wait_s"]
     rows = [
         f"serving_lat_ttft_p50,{ttft['p50'] * 1e6:.0f},"
@@ -724,6 +742,7 @@ def latency_rows(rate: float, out_path: str | None = None,
                            "async_lower_bubble":
                                an["bubble_fraction"]
                                < sy["bubble_fraction"],
+                           "bubble_assert_armed": bubble_armed,
                        }}, f, indent=1)
         # sibling file so CI's serving_latency*.json glob captures the
         # async mode as its own artifact
@@ -981,6 +1000,191 @@ def failover_rows(out_path: str | None = None,
 
 
 # ---------------------------------------------------------------------------
+# Disaggregated prefill/decode (--disagg): colocated vs split-role A/B
+# ---------------------------------------------------------------------------
+
+DIS_LONG_PROMPT, DIS_LONG_GEN = 64, 8      # prefill-heavy class
+DIS_SHORT_PROMPT, DIS_SHORT_GEN = 16, 16   # decode-heavy class
+DIS_NREQ, DIS_RATE, DIS_SLOTS = 12, 6.0, 12
+
+
+def disagg_rows(out_path: str | None = None,
+                trace_path: str | None = None) -> list[str]:
+    """Disaggregation A/B (DESIGN.md §16): one mixed long-prompt /
+    short-decode Poisson schedule replayed open-loop against (a) a
+    colocated cluster of two mixed replicas and (b) a 1-prefill +
+    1-decode split cluster, with a closed-loop single engine as the
+    byte-parity oracle.  Both clusters hold the same slot count per
+    replica, so the decode batch shape is identical — what changes is
+    step *composition*: every colocated tick pays two full fixed-shape
+    decode calls (one per replica, regardless of how many rows are
+    live) plus whatever prefill chunks each replica interleaves, while
+    the split cluster pays exactly one decode call on the decode
+    replica and keeps long-prompt chunks off it entirely.  Decode-class
+    TPOT isolates that composition win, which is why the p99 assert
+    holds even on a sequentially-stepped single host.
+
+    Every request must finish byte-identical to the oracle on both
+    sides (migration is invisible at the token level; §16's recompute
+    fallback included).  TTFT, decode-class TPOT p50/p99 and goodput
+    land in ``results/serving_disagg.json``; the split run's Chrome
+    trace (per-role tracks) goes to ``--trace-out``.  The
+    p99-TPOT-strictly-lower assert arms at ``cpu_count >= 2`` — below
+    that the host scheduler time-slicing two replica processes is the
+    measurement — and the armed flag rides in the JSON."""
+    from repro.obs import Telemetry, write_chrome
+    from repro.serve import Cluster, ClusterConfig
+
+    cfg = bench_cfg()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(29)
+    reqs = []                              # (prompt, gen, class)
+    for i in range(DIS_NREQ):
+        plen, gen, cls = ((DIS_LONG_PROMPT, DIS_LONG_GEN, "long_prompt")
+                          if i % 2 == 0 else
+                          (DIS_SHORT_PROMPT, DIS_SHORT_GEN,
+                           "short_decode"))
+        reqs.append(([int(t) for t in rng.integers(0, cfg.vocab_size,
+                                                   plen)], gen, cls))
+    arrivals = np.cumsum(rng.exponential(1.0 / DIS_RATE, DIS_NREQ))
+    base = dict(block_size=16, max_len=DIS_LONG_PROMPT + DIS_SHORT_GEN + 16,
+                chunk_size=16)
+
+    eng = Engine(model, params, ServeConfig(max_seqs=DIS_SLOTS, **base))
+
+    def oracle():
+        eng.reset()
+        for p, g, _ in reqs:
+            eng.add_request(p, max_new_tokens=g)
+        out, _ = eng.run()
+        return {i: tuple(out[i].tokens) for i in sorted(out)}
+
+    oracle()                                        # compile
+    ref = oracle()
+
+    def mk_engines(roles):
+        return [Engine(model, params,
+                       ServeConfig(max_seqs=DIS_SLOTS, role=r, **base))
+                for r in roles]
+
+    def drive(engines, tel):
+        """Replay the arrival schedule open-loop; returns (metrics,
+        {submission index: (tokens, reason)})."""
+        cl = Cluster(engines, ClusterConfig(), telemetry=tel)
+        walls: list[list[float]] = [[] for _ in range(DIS_NREQ)]
+        submit_at = [0.0] * DIS_NREQ
+        rids = [0] * DIS_NREQ
+
+        def stream(i):
+            return lambda t, done: (walls[i].append(time.perf_counter())
+                                    if t is not None else None)
+
+        t0 = time.perf_counter()
+        nxt, ticks = 0, 0
+        while nxt < DIS_NREQ or cl.has_work:
+            now = time.perf_counter() - t0
+            while nxt < DIS_NREQ and arrivals[nxt] <= now:
+                p, g, _ = reqs[nxt]
+                submit_at[nxt] = time.perf_counter()
+                rids[nxt] = cl.submit(p, max_new_tokens=g,
+                                      on_token=stream(nxt))
+                nxt += 1
+            if cl.has_work:
+                cl.step()
+                ticks += 1
+                assert ticks <= 100_000, "disagg bench deadlocked"
+            elif nxt < DIS_NREQ:
+                time.sleep(min(arrivals[nxt] - now, 0.01))
+        makespan = time.perf_counter() - t0
+        res, stats = cl.run()                       # drained: collect only
+        cl.check()
+        for r in cl.replicas:
+            a = r.engine.cache_host.allocator
+            assert a.num_live == 0 and a.num_held == 0, \
+                f"{r.name}: leaked blocks"
+        out = {rids.index(rid): (tuple(rec.tokens), rec.finish_reason)
+               for rid, rec in res.items()}
+        ttft = [walls[i][0] - submit_at[i] for i in range(DIS_NREQ)]
+        short = [i for i, (_, _, c) in enumerate(reqs)
+                 if c == "short_decode"]
+        gaps = lambda ids: np.concatenate(
+            [np.diff(walls[i]) for i in ids if len(walls[i]) > 1])
+        toks = sum(len(v) for v, _ in out.values())
+        return {
+            "makespan_s": makespan,
+            "goodput_tok_per_s": toks / max(makespan, 1e-9),
+            "ttft_s": _percentiles(ttft),
+            "ttft_short_s": _percentiles([ttft[i] for i in short]),
+            "tpot_s": _percentiles(gaps(range(DIS_NREQ))),
+            "tpot_short_s": _percentiles(gaps(short)),
+            **{k: stats[k] for k in ("disagg_migrations",
+                                     "migrated_blocks", "ticks", "steps")},
+        }, out
+
+    colo_engines = mk_engines(["mixed", "mixed"])
+    dis_engines = mk_engines(["prefill", "decode"])
+    drive(colo_engines, None)                       # compile
+    drive(dis_engines, None)
+    colo, colo_out = drive(colo_engines, Telemetry(enabled=True))
+    tel = Telemetry(enabled=True)
+    dis, dis_out = drive(dis_engines, tel)
+
+    for got, label in ((colo_out, "colocated"), (dis_out, "disagg")):
+        assert {i: v for i, (v, _) in got.items()} == ref, \
+            f"{label} outputs diverge from the single-engine oracle"
+        assert all(r == "length" for _, r in got.values()), \
+            f"{label} failed requests"
+    assert dis["disagg_migrations"] == DIS_NREQ
+    assert colo["disagg_migrations"] == 0
+
+    armed = (os.cpu_count() or 1) >= 2
+    if armed:
+        assert dis["tpot_short_s"]["p99"] < colo["tpot_short_s"]["p99"], \
+            (f"disagg decode p99 TPOT {dis['tpot_short_s']['p99']:.4f}s "
+             f"not below colocated {colo['tpot_short_s']['p99']:.4f}s")
+
+    ct, dt_ = colo["tpot_short_s"], dis["tpot_short_s"]
+    rows = [
+        f"serving_disagg_tpot_p50,{dt_['p50'] * 1e6:.0f},"
+        f"{dt_['p50'] * 1e3:.1f}ms/token decode-class p50 disagg "
+        f"(vs {ct['p50'] * 1e3:.1f}ms colocated)",
+        f"serving_disagg_tpot_p99,{dt_['p99'] * 1e6:.0f},"
+        f"{dt_['p99'] * 1e3:.1f}ms/token decode-class p99 disagg "
+        f"(vs {ct['p99'] * 1e3:.1f}ms colocated, assert "
+        f"{'armed' if armed else 'unarmed'})",
+        f"serving_disagg_ttft_p99,{dis['ttft_s']['p99'] * 1e6:.0f},"
+        f"{dis['ttft_s']['p99'] * 1e3:.1f}ms TTFT p99 disagg "
+        f"(vs {colo['ttft_s']['p99'] * 1e3:.1f}ms colocated; prefill "
+        f"serialized on one replica + handoff)",
+        f"serving_disagg_goodput,"
+        f"{1e6 / max(dis['goodput_tok_per_s'], 1e-9):.1f},"
+        f"{dis['goodput_tok_per_s']:.1f} tok/s disagg vs "
+        f"{colo['goodput_tok_per_s']:.1f} colocated, "
+        f"{dis['disagg_migrations']:.0f} migrations "
+        f"({dis['migrated_blocks']:.0f} blocks), byte-identical",
+    ]
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump({"rows": rows, "requests": DIS_NREQ,
+                       "arrival_rate": DIS_RATE,
+                       "slots_per_replica": DIS_SLOTS,
+                       "classes": {"long_prompt": [DIS_LONG_PROMPT,
+                                                   DIS_LONG_GEN],
+                                   "short_decode": [DIS_SHORT_PROMPT,
+                                                    DIS_SHORT_GEN]},
+                       "cpu_count": os.cpu_count(),
+                       "tpot_assert_armed": armed,
+                       "colocated": colo, "disagg": dis,
+                       "byte_identical": True}, f, indent=1)
+    if trace_path:
+        os.makedirs(os.path.dirname(trace_path) or ".", exist_ok=True)
+        write_chrome(tel.trace, trace_path)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Sharded serving (--sharded): data-parallel slots, byte-identical outputs
 # ---------------------------------------------------------------------------
 
@@ -1155,6 +1359,12 @@ if __name__ == "__main__":
                     help="run the replica-kill failover A/B: goodput on "
                          "2 healthy replicas vs one killed mid-decode, "
                          "outputs byte-checked against a single engine")
+    ap.add_argument("--disagg", action="store_true",
+                    help="run the prefill/decode disaggregation A/B: one "
+                         "Poisson schedule on a colocated 2-mixed cluster "
+                         "vs a 1-prefill + 1-decode split, byte-checked "
+                         "against a single engine (decode TPOT, TTFT, "
+                         "goodput)")
     ap.add_argument("--sharded-worker", default=None, metavar="DxM",
                     help=argparse.SUPPRESS)   # internal subprocess mode
     ap.add_argument("--out", default=None,
@@ -1174,6 +1384,8 @@ if __name__ == "__main__":
                 if args.cache_dtype
                 else failover_rows(args.out, args.trace_out)
                 if args.failover
+                else disagg_rows(args.out, args.trace_out)
+                if args.disagg
                 else chaos_rows(args.fault_rate, args.out,
                                 args.trace_out)
                 if args.fault_rate

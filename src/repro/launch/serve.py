@@ -55,6 +55,13 @@ snapshot/block handoff (byte-identical at temperature 0), and SIGHUP
 triggers a rolling restart of every replica in turn with zero failed
 requests.
 
+``--prefill-replicas N`` disaggregates the cluster (DESIGN.md §16): N
+dedicated prefill-role replicas take every new prompt, and on final-
+chunk completion each sequence's KV+scale blocks migrate byte-exactly
+to the least-loaded of the ``--replicas`` decode-role replicas, so
+long prompts stop stealing decode steps from latency-sensitive
+requests.
+
 ``generate`` (sequential, token-by-token) is kept as the correctness
 oracle the engine is tested against (tests/test_serve.py).
 """
@@ -95,7 +102,7 @@ def generate(model, params, prompt: jax.Array, gen_len: int,
 
 
 def build_engine(cfg, model, params, args, draft_model=None,
-                 draft_params=None, telemetry=None):
+                 draft_params=None, telemetry=None, role="mixed"):
     from repro.launch.mesh import parse_mesh
     from repro.serve import Engine, ServeConfig
     mesh = parse_mesh(args.mesh) if args.mesh else None
@@ -103,6 +110,7 @@ def build_engine(cfg, model, params, args, draft_model=None,
     # must stay within per-seq capacity or tail cycles degrade to plain
     # decode (DESIGN.md §9)
     return Engine(model, params, ServeConfig(
+        role=role,
         max_seqs=args.max_seqs, block_size=args.block_size,
         max_len=args.max_len or (args.prompt_len + args.gen + args.spec_k),
         num_blocks=args.num_blocks, seed=args.seed,
@@ -136,7 +144,12 @@ def _serve_replicated(engines, args, toks, lens, stop, telemetry):
         cluster.submit([int(t) for t in toks[i, :lens[i]]],
                        max_new_tokens=args.gen,
                        temperature=args.temperature)
-    print(f"cluster ready ({args.replicas} replicas)", flush=True)
+    n_pre = getattr(args, "prefill_replicas", 0)
+    if n_pre:
+        print(f"cluster ready ({n_pre} prefill + {args.replicas} decode "
+              f"replicas)", flush=True)
+    else:
+        print(f"cluster ready ({args.replicas} replicas)", flush=True)
     while True:
         out, stats = cluster.run(
             stop_when=lambda: "sig" in stop or "hup" in hup)
@@ -157,7 +170,8 @@ def _serve_replicated(engines, args, toks, lens, stop, telemetry):
           f"{stats['steps']:.0f} engine steps | "
           f"{stats['alive']:.0f}/{stats['replicas']:.0f} alive | "
           f"failovers {stats['failovers']:.0f} | "
-          f"migrated blocks {stats['migrated_blocks']:.0f}")
+          f"migrated blocks {stats['migrated_blocks']:.0f} | "
+          f"disagg migrations {stats['disagg_migrations']:.0f}")
     if out:
         first = out[min(out)]
         print("sample token ids:", first.tokens[:16])
@@ -236,6 +250,13 @@ def main():
                          "failover via snapshot/block handoff, and "
                          "SIGHUP-triggered rolling restarts "
                          "(DESIGN.md §15)")
+    ap.add_argument("--prefill-replicas", type=int, default=0,
+                    help="disaggregated serving (DESIGN.md §16): N "
+                         "dedicated prefill-role replicas in front of "
+                         "--replicas decode-role replicas; prompts "
+                         "prefill on the prefill tier and migrate "
+                         "their KV blocks to the decode tier on final-"
+                         "chunk completion (0 = colocated)")
     ap.add_argument("--drain-timeout", type=float, default=0.0,
                     help="drain() deadline in seconds: running requests "
                          "past it are force-preempted to the waiting "
@@ -320,12 +341,23 @@ def main():
         signal.signal(sig, lambda signum, frame: stop.setdefault(
             "sig", signum))
 
-    if args.replicas > 1:
-        extra = [build_engine(cfg, model, params, args, draft_model,
-                              draft_params, telemetry=None)
-                 for _ in range(args.replicas - 1)]
-        _serve_replicated([engine] + extra, args, toks, lens, stop,
-                          telemetry)
+    if args.replicas > 1 or args.prefill_replicas > 0:
+        if args.prefill_replicas > 0:
+            # disaggregated tiers (DESIGN.md §16): N prefill-role
+            # replicas feed --replicas decode-role replicas; the
+            # pre-built mixed engine is not part of the cluster
+            roles = ["prefill"] * args.prefill_replicas + \
+                ["decode"] * args.replicas
+            engines = [build_engine(cfg, model, params, args, draft_model,
+                                    draft_params, telemetry=None,
+                                    role=role)
+                       for role in roles]
+        else:
+            engines = [engine] + [
+                build_engine(cfg, model, params, args, draft_model,
+                             draft_params, telemetry=None)
+                for _ in range(args.replicas - 1)]
+        _serve_replicated(engines, args, toks, lens, stop, telemetry)
         return
 
     t0 = time.time()

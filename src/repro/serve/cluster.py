@@ -27,6 +27,21 @@ and owns the control plane the single engine deliberately does not:
     replica — ``rolling_restart`` does each replica in turn with zero
     failed requests.
 
+Disaggregated prefill/decode (DESIGN.md §16): each replica carries the
+*role* its engine was configured with (``ServeConfig.role``).  A
+``prefill`` replica plans prefill chunks only — new prompts are routed
+to it, the final chunk samples the first token, and the sequence is
+then *parked*; every cluster tick migrates parked sequences to the
+least-loaded compatible decode-capable replica over the same
+``export_slot``/``import_slot`` byte-exact block transport failover
+uses (zero recompute; the adopter falls back to waiting-with-recompute
+when its pool lacks headroom right now).  A ``decode`` replica is kept
+off the new-prompt routing path but plans normally, so the recompute
+fallback and failover re-homes still work on it.  ``mixed`` (the
+default) opts out of all of this.  Planned migrations never burn the
+retry budget; a dying prefill replica's half-prefilled sequences
+re-home through the ordinary failover path with role-aware placement.
+
 Request identity: each replica's ``_rid`` counter is pre-based at
 ``replica_index * rid_stride`` so locally-assigned rids are globally
 unique — no rid translation on the hot path and no collisions in the
@@ -48,7 +63,7 @@ import dataclasses
 import time
 from typing import Any, Iterable
 
-from repro.obs import MetricsRegistry, Telemetry
+from repro.obs import DEFAULT_TIME_BUCKETS, MetricsRegistry, Telemetry
 from repro.serve.engine import (AuditViolation, Engine, EngineOverloaded,
                                 FinishedRequest, SequenceHandoff)
 from repro.serve.faults import CrashError, FaultError, FaultInjector
@@ -72,6 +87,7 @@ class ClusterConfig:
 class Replica:
     engine: Engine
     name: str
+    role: str = "mixed"            # mirror of engine.cfg.role
     state: str = "alive"           # alive | draining | dead
     last_beat: int = 0             # cluster tick of the last heartbeat
     last_steps: int = 0            # engine step counter at that beat
@@ -96,18 +112,27 @@ class Cluster:
             else MetricsRegistry()
         self._failovers = self.registry.counter("serve/failovers")
         self._migrated = self.registry.counter("serve/migrated_blocks")
+        self._disagg = self.registry.counter("serve/disagg_migrations")
         self.replicas: list[Replica] = []
         for i, eng in enumerate(engines):
-            name = f"replica{i}:{eng.model.cfg.name}"
+            role = eng.cfg.role
+            name = f"replica{i}:{eng.model.cfg.name}" + \
+                ("" if role == "mixed" else f":{role}")
             if telemetry is not None:
                 # private registry per replica, shared trace, own track
+                # (per-role track names: the trace shows which lane is
+                # prefill vs decode at a glance)
                 eng.obs = Telemetry(enabled=telemetry.enabled,
                                     trace=telemetry.trace, track=i)
                 telemetry.trace.set_track_name(i, name)
                 eng.reset()            # re-register counters there
             # rid namespacing: engine-assigned rids are globally unique
             eng._rid = i * self.cfg.rid_stride
-            self.replicas.append(Replica(engine=eng, name=name))
+            self.replicas.append(Replica(engine=eng, name=name, role=role))
+        if any(r.role == "prefill" for r in self.replicas) and \
+                not any(r.role != "prefill" for r in self.replicas):
+            raise ValueError("a cluster with prefill-role replicas needs "
+                             "at least one decode-capable replica")
         self._tick = 0
         self._alias: dict[int, int] = {}      # current rid -> original rid
         self._retries: dict[int, int] = {}    # original rid -> failovers
@@ -124,12 +149,19 @@ class Cluster:
     def submit(self, prompt, **kw) -> int:
         """Route one request (``Engine.add_request`` kwargs) to the
         least-loaded alive replica; backpressure falls through to the
-        next candidate.  Returns the globally-unique rid."""
+        next candidate.  Returns the globally-unique rid.
+
+        Role-aware: decode-role replicas are skipped while any prefill-
+        capable (prefill/mixed) replica is alive — new prompts are
+        prefill work.  If only decode replicas survive, they take the
+        prompts anyway (their engines plan normally); availability
+        beats the role split."""
         alive = sorted(self._alive(), key=self._load)
         if not alive:
             raise RuntimeError("no alive replicas")
+        pref = [r for r in alive if r.role != "decode"]
         last: Exception | None = None
-        for r in alive:
+        for r in pref or alive:
             try:
                 return r.engine.add_request(prompt, **kw)
             except EngineOverloaded as e:
@@ -171,6 +203,7 @@ class Cluster:
                 self.kill(i, reason="heartbeat")
                 continue
             self._collect(i)
+        self._migrate_ready()
         if self.obs is not None and self.obs.enabled:
             for i, r in enumerate(self.replicas):
                 a = r.engine.cache_host.allocator
@@ -181,9 +214,49 @@ class Cluster:
                     "free_blocks": float(a.num_free)})
 
     def _collect(self, i: int) -> None:
+        # a finished request retires its routing state with it: the
+        # alias entry that mapped its migrated rid home and whatever
+        # retry budget it burned — long-lived clusters must not grow
+        # either map without bound
         for rid, rec in self.replicas[i].engine.pop_finished().items():
             orig = self._alias.pop(rid, rid)
+            self._retries.pop(orig, None)
             self._results[orig] = dataclasses.replace(rec, rid=orig)
+
+    # ----- prefill/decode disaggregation (DESIGN.md §16) -----
+    def _migrate_ready(self) -> None:
+        """Move every parked sequence off the prefill replicas: a
+        prefill-role engine plans no decode work, so a request whose
+        final chunk completed (``decode_ready``) sits until this hands
+        its KV+scale blocks and prefix chain to the least-loaded
+        compatible decode-capable replica.  Pool headroom is not
+        required — ``adopt`` falls back to waiting-with-recompute on
+        the target — but a request no decode-capable replica can ever
+        fit fails here, exactly like failover with no survivor.
+        Planned migrations never burn the retry budget."""
+        for r in self.replicas:
+            if r.state != "alive" or r.role != "prefill":
+                continue
+            eng = r.engine
+            for rid in eng.decode_ready():
+                t0 = time.perf_counter()
+                h = eng.export_request(rid, remove=True)
+                orig = self._alias.pop(rid, rid)
+                targets = sorted(
+                    (t for t in self._compatible(h) if t.role != "prefill"),
+                    key=lambda t: (t.role != "decode", self._load(t)))
+                if self._adopt_onto(h, orig, targets):
+                    self._disagg.inc()
+                    # migrating work off a replica is scheduling
+                    # progress; don't let the heartbeat starve a
+                    # prefill replica that just went idle this way
+                    r.last_beat = self._tick
+                    if self.obs is not None:
+                        self.obs.observe("migrate/handoff_s",
+                                         time.perf_counter() - t0,
+                                         buckets=DEFAULT_TIME_BUCKETS)
+                else:
+                    self._fail(orig, h)
 
     # ----- failover -----
     def kill(self, i: int, reason: str = "killed") -> None:
@@ -204,14 +277,43 @@ class Cluster:
         handoffs += eng.export_backlog()
         self._rehome(handoffs, count_retry=True)
 
+    def _compatible(self, h: SequenceHandoff) -> list[Replica]:
+        """Alive replicas a handoff can land on at all (byte parity
+        holds only across identical model + params)."""
+        return [t for t in self._alive()
+                if t.engine.model.cfg.name == h.key[0]
+                and t.engine.model.cfg.vocab_size == h.key[1]]
+
+    def _adopt_onto(self, h: SequenceHandoff, orig: int,
+                    targets: list[Replica]) -> bool:
+        """Adopt a handoff onto the first target that fits; rewires the
+        rid alias and counts migrated blocks.  False = none fit."""
+        for t in targets:
+            try:
+                before = t.engine._c["migrated_blocks"].value
+                new_rid = t.engine.adopt(h)
+            except ValueError:
+                continue                # does not fit this replica
+            self._alias[new_rid] = orig
+            self._migrated.inc(
+                t.engine._c["migrated_blocks"].value - before)
+            return True
+        return False
+
     def _rehome(self, handoffs: list[SequenceHandoff],
                 count_retry: bool) -> None:
         """Adopt each handoff onto the least-loaded alive replica running
-        the same model (byte parity holds only across identical model +
-        params).  ``count_retry`` failovers burn the request's retry
-        budget; planned drain migrations do not.  A request with no
+        the same model.  ``count_retry`` failovers burn the request's
+        retry budget; planned drain migrations do not.  A request with no
         compatible survivor, an exhausted budget, or no room anywhere
-        fails with finish_reason "error"."""
+        fails with finish_reason "error".
+
+        Role-aware placement: a handoff still in its prefill phase needs
+        prefill steps, so prefill-capable (prefill/mixed) replicas are
+        preferred but any compatible replica works (decode-role engines
+        plan normally).  A decode-phase handoff parked on a prefill-role
+        replica would never advance, so those are restricted to decode-
+        capable replicas outright."""
         for h in handoffs:
             old = h.state.req.rid
             orig = self._alias.pop(old, old)
@@ -220,25 +322,21 @@ class Cluster:
                 if self._retries[orig] > self.cfg.retry_budget:
                     self._fail(orig, h)
                     continue
-            targets = sorted(
-                (t for t in self._alive()
-                 if t.engine.model.cfg.name == h.key[0]
-                 and t.engine.model.cfg.vocab_size == h.key[1]),
-                key=self._load)
-            for t in targets:
-                try:
-                    before = t.engine._c["migrated_blocks"].value
-                    new_rid = t.engine.adopt(h)
-                except ValueError:
-                    continue            # does not fit this replica
-                self._alias[new_rid] = orig
-                self._migrated.inc(
-                    t.engine._c["migrated_blocks"].value - before)
-                break
+            decode_phase = h.state.phase == "decode"
+            if decode_phase:
+                targets = sorted(
+                    (t for t in self._compatible(h)
+                     if t.role != "prefill"),
+                    key=lambda t: (t.role != "decode", self._load(t)))
             else:
+                targets = sorted(
+                    self._compatible(h),
+                    key=lambda t: (t.role == "decode", self._load(t)))
+            if not self._adopt_onto(h, orig, targets):
                 self._fail(orig, h)
 
     def _fail(self, orig: int, h: SequenceHandoff) -> None:
+        self._retries.pop(orig, None)   # terminal: retire its budget
         st = h.state
         self._results[orig] = FinishedRequest(
             rid=orig, prompt=st.req.prompt, tokens=list(st.generated),
@@ -260,13 +358,26 @@ class Cluster:
         assert r.state == "alive", f"restart of {r.state} replica {i}"
         r.state = "draining"
         eng = r.engine
-        for rid, rec in eng.drain(self.cfg.drain_timeout_s).items():
-            orig = self._alias.pop(rid, rid)
-            self._results[orig] = dataclasses.replace(rec, rid=orig)
-        others = [t for t in self._alive() if t is not r]
-        if others:
-            self._rehome(eng.export_backlog(remove=True),
-                         count_retry=False)
+        if r.role == "prefill":
+            # a prefill replica cannot finish its running requests —
+            # they park at decode phase — so a deadline-bounded drain
+            # would only burn the deadline.  Migrate everything live
+            # instead (reconciled export, nothing lost, no retry cost).
+            rids = [s.req.rid for s in eng.scheduler.running if not s.done]
+            handoffs = [eng.export_request(rid, remove=True)
+                        for rid in rids]
+            handoffs += eng.export_backlog(remove=True)
+            self._rehome(handoffs, count_retry=False)
+            self._collect(i)
+        else:
+            for rid, rec in eng.drain(self.cfg.drain_timeout_s).items():
+                orig = self._alias.pop(rid, rid)
+                self._retries.pop(orig, None)
+                self._results[orig] = dataclasses.replace(rec, rid=orig)
+            others = [t for t in self._alive() if t is not r]
+            if others:
+                self._rehome(eng.export_backlog(remove=True),
+                             count_retry=False)
         snap = eng.snapshot()
         eng.restore(snap)               # reset + byte-identical resume;
         r.state = "alive"               # restore clears the drain latch
@@ -289,6 +400,7 @@ class Cluster:
         for r in self._alive():
             for rid, rec in r.engine.drain(timeout_s).items():
                 orig = self._alias.pop(rid, rid)
+                self._retries.pop(orig, None)
                 rec = dataclasses.replace(rec, rid=orig)
                 self._results[orig] = rec
                 out[orig] = rec
@@ -329,6 +441,7 @@ class Cluster:
             "alive": float(len(alive)),
             "failovers": float(self._failovers.value),
             "migrated_blocks": float(self._migrated.value),
+            "disagg_migrations": float(self._disagg.value),
             "steps": float(sum(r.engine._steps for r in self.replicas)),
             "completed": float(len(self._results)),
         }

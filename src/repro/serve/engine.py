@@ -111,7 +111,11 @@ _RUN_COUNTERS = ("steps", "decode_tokens", "prefill_tokens",
                  "faults_injected", "recoveries", "requests_shed",
                  "audit_violations", "callback_errors",
                  # cluster failover / block migration (DESIGN.md §15)
-                 "migrated_blocks")
+                 "migrated_blocks",
+                 # intra-mesh cross-shard aliasing (DESIGN.md §16):
+                 # refused cross-shard prefix matches vs replica copies
+                 # executed to make the alias legal
+                 "alias_refusals", "shard_moves")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,6 +185,20 @@ class ServeConfig:
                                       # able) so a straggler cannot
                                       # stall a rolling restart
                                       # (0 = unbounded)
+    role: str = "mixed"               # disaggregated serving (DESIGN.md
+                                      # §16): "mixed" plans everything;
+                                      # "prefill" plans prefill chunks
+                                      # only and parks decode-phase
+                                      # sequences for cluster migration;
+                                      # "decode" plans normally (it can
+                                      # recompute-prefill on fallback) —
+                                      # the Cluster keeps new prompts
+                                      # off it
+    migrate_on_alias: bool = True     # DP mode: migrate blocks across
+                                      # shard replicas to serve cross-
+                                      # shard prefix aliases (False =
+                                      # PR 4's conservative refusal,
+                                      # counted in alias_refusals)
 
     @property
     def blocks_per_seq(self) -> int:
@@ -375,6 +393,9 @@ class Engine:
         if self.cfg.donate_pools not in ("auto", "always", "never"):
             raise ValueError(f"donate_pools {self.cfg.donate_pools!r} "
                              f"not in ('auto', 'always', 'never')")
+        if self.cfg.role not in ("mixed", "prefill", "decode"):
+            raise ValueError(f"role {self.cfg.role!r} "
+                             f"not in ('mixed', 'prefill', 'decode')")
         self._donate_pools = {
             "auto": not (self.cfg.async_step
                          and jax.default_backend() == "cpu"),
@@ -569,7 +590,9 @@ class Engine:
             block_size=self.cfg.block_size,
             max_blocks_per_seq=self.cfg.blocks_per_seq,
             prefix_caching=self._prefix_ok,
-            data_shards=self._data_shards if self.shard_mode == "dp" else 1)
+            data_shards=self._data_shards if self.shard_mode == "dp" else 1,
+            migrate_on_alias=(self.shard_mode == "dp"
+                              and self.cfg.migrate_on_alias))
         self.scheduler = FCFSScheduler(self.cache_host)
         self._key = jax.random.PRNGKey(self.cfg.seed)
         self._rid = 0
@@ -1110,13 +1133,18 @@ class Engine:
                     plan = self.scheduler.plan_step(
                         self.cfg.chunk_size, self.cfg.prefill_budget,
                         plan_spec_k, self.cfg.spec_ema,
-                        allow_admission=not self._draining)
+                        allow_admission=not self._draining,
+                        prefill_only=self.cfg.role == "prefill")
                     break
                 except OutOfBlocks:
                     # a lone running request outgrew the pool — recover
                     # instead of crashing the engine (DESIGN.md §14)
                     if not self._unjam():
                         raise
+        refusals = self.cache_host.alias_refusals
+        if refusals > self._c["alias_refusals"].value:
+            self._c["alias_refusals"].inc(
+                refusals - self._c["alias_refusals"].value)
         self._note_transitions(plan)
         if prev is not None:
             # _can_overlap proved the pool could back every growth
@@ -1127,6 +1155,25 @@ class Engine:
             self._admit_step.setdefault(s.req.rid, self._steps)
         if not running:
             return None
+
+        # intra-mesh block migration (DESIGN.md §16) must precede the
+        # COW copies and dispatch: a cross-shard alias admitted by this
+        # plan is only readable on its new home once the replica copy
+        # lands, and COW sources must be local to the writing shard.
+        # (Reading pool buffers here implicitly syncs an overlapped
+        # in-flight step — migration trades one bubble for recompute.)
+        moves = self.cache_host.drain_moves()
+        if moves:
+            with self._phase("migrate"):
+                t0 = time.perf_counter()
+                self.cache = self._apply_moves(self.cache, moves)
+                if self.spec_active:
+                    self.draft_cache = self._apply_moves(
+                        self.draft_cache, moves)
+                self._c["shard_moves"].inc(len(moves))
+                self.obs.observe("migrate/intra_mesh_s",
+                                 time.perf_counter() - t0,
+                                 buckets=DEFAULT_TIME_BUCKETS)
 
         for src, dst in plan.copies:          # copy-on-write pool copies
             self.cache = self._cow_fn(self.cache, np.int32(src),
@@ -1570,6 +1617,16 @@ class Engine:
             s.num_cached = max(0, min(s.num_cached, len(s.seq) - 1))
             s.draft_cached = min(s.draft_cached, max(s.num_cached, 0))
 
+    def decode_ready(self) -> list[int]:
+        """Rids whose prefill is complete (phase flipped to decode) —
+        on a prefill-role engine these are parked by ``prefill_only``
+        planning and wait for the cluster to migrate them to a decode
+        replica (DESIGN.md §16).  The first token is already sampled
+        (the final chunk's sampled prefill), so a done request never
+        shows up here — it retires locally instead."""
+        return [s.req.rid for s in self.scheduler.running
+                if s.phase == "decode" and not s.done]
+
     def export_request(self, rid: int, remove: bool = False
                        ) -> SequenceHandoff:
         """Export one live (running or waiting) request as a
@@ -1723,6 +1780,39 @@ class Engine:
         for name, v in vals.items():
             if name in out:
                 out[name] = out[name].at[:, idx].set(jnp.asarray(v))
+        return out
+
+    def _apply_moves(self, pools, moves: list[tuple[int, int, int]]):
+        """Intra-mesh block migration (DESIGN.md §16): copy block bytes
+        between per-device pool *replicas* so a cross-shard prefix alias
+        reads valid KV on its new home shard.  DP pools are replicated
+        NamedShardings whose per-device buffers legitimately diverge
+        (each device is authoritative for its own slots' blocks), so
+        this is host-mediated buffer surgery: pick each device's buffer
+        out of ``addressable_shards``, copy the source shard's bytes for
+        the moved blocks onto the destination device, and rebuild the
+        array from the per-device buffers.  Scale pools ride along via
+        ``_POOL_KEYS``.  Moves are grouped per (src, dst) pair in first-
+        occurrence order, which preserves chained re-homes (a block
+        moved A->B then B->C sources B's already-updated buffer)."""
+        devs = list(self.mesh.devices.flat)   # data-axis order (model=1)
+        grouped: dict[tuple[int, int], list[int]] = {}
+        for b, src, dst in moves:
+            grouped.setdefault((src, dst), []).append(b)
+        out = dict(pools)
+        for name in _POOL_KEYS:
+            if name not in out:
+                continue
+            arr = out[name]
+            shards = arr.addressable_shards
+            per = {s.device: s.data for s in shards}
+            for (src, dst), blocks in grouped.items():
+                idx = jnp.asarray(np.asarray(blocks, np.int32))
+                payload = jax.device_put(per[devs[src]][:, idx],
+                                         devs[dst])
+                per[devs[dst]] = per[devs[dst]].at[:, idx].set(payload)
+            out[name] = jax.make_array_from_single_device_arrays(
+                arr.shape, arr.sharding, [per[s.device] for s in shards])
         return out
 
     def _dispatch_decode(self, plan, spec_k, fetch, spec_meta, prev=None):

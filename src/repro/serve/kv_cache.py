@@ -226,6 +226,12 @@ class PagedCache:
     hands a block to slots on that shard — an alias across shards would
     read another replica's garbage.  ``data_shards == 1`` (single device,
     or GSPMD-consistent pools) keeps the global index.
+
+    ``migrate_on_alias`` (intra-mesh block migration, DESIGN.md §16):
+    instead of refusing a cross-shard match, schedule a home-shard →
+    requesting-shard replica copy for the engine to run before the next
+    device step, re-home the block, and alias it as usual.  Off by
+    default so raw-cache users keep the conservative refusal.
     """
 
     max_seqs: int
@@ -234,6 +240,7 @@ class PagedCache:
     max_blocks_per_seq: int
     prefix_caching: bool = False
     data_shards: int = 1
+    migrate_on_alias: bool = False
 
     def __post_init__(self):
         # non-dividing shard counts fall back to the global (1-shard) view
@@ -254,9 +261,15 @@ class PagedCache:
         # the commit cursor block by block)
         self._chain: list[list[int]] = [[] for _ in range(self.max_seqs)]
         # prefix-index effectiveness (repro.obs pool gauges): full-block
-        # index probes at admission vs probes that aliased a block
+        # index probes at admission vs probes that aliased a block, plus
+        # cross-shard matches the DP home-shard rule turned away
         self.prefix_lookups = 0
         self.prefix_hits = 0
+        self.alias_refusals = 0
+        # cross-shard replica copies scheduled by assign_prefix under
+        # migrate_on_alias: (block, src_shard, dst_shard), drained by the
+        # engine before the step that first reads the alias
+        self._pending_moves: list[tuple[int, int, int]] = []
         # degradation ladder (DESIGN.md §14): while paused, commit() stops
         # registering new blocks in the prefix index, so released blocks
         # return straight to the free list instead of lingering cached
@@ -377,6 +390,19 @@ class PagedCache:
                         self._home_of[b] = home
         return new[:n_blocks]
 
+    def drain_moves(self) -> list[tuple[int, int, int]]:
+        """Return-and-clear the cross-shard replica copies scheduled by
+        ``assign_prefix`` since the last drain, as (block, src_shard,
+        dst_shard) in schedule order (order matters: a block re-homed
+        twice in one plan chains its copies).  The engine must run these
+        *before* the step's device writes — the copy sources a block's
+        current home-replica bytes, and nothing is allowed to overwrite
+        them in between.  A move whose alias was rolled back (admission
+        ran out of blocks after the match) may survive here; draining it
+        copies bytes nothing reads, which is wasteful but harmless."""
+        moves, self._pending_moves = self._pending_moves, []
+        return moves
+
     # ----- prefix caching -----
     def _forget_block(self, block: int) -> None:
         h = self._hash_of.pop(block)
@@ -402,12 +428,19 @@ class PagedCache:
             b = self._block_of.get(h2)
             if b is None:
                 break
-            if self.data_shards > 1 and \
-                    self._home_of.get(b) != self.shard_of(slot):
+            home = self._home_of.get(b)
+            if self.data_shards > 1 and home != self.shard_of(slot):
                 # per-replica pools: the block's KV only exists on its
                 # home shard — an alias from another shard would read
-                # that shard's (garbage) replica
-                break
+                # that shard's (garbage) replica.  With migration on,
+                # schedule a replica copy home -> our shard and re-home;
+                # the engine runs the copy before this step's dispatch,
+                # so by the time the alias is read the bytes are local.
+                if not self.migrate_on_alias:
+                    self.alias_refusals += 1
+                    break
+                self._pending_moves.append((b, home, self.shard_of(slot)))
+                self._home_of[b] = self.shard_of(slot)
             self.allocator.incref(b)
             self.prefix_hits += 1
             matched.append(b)
@@ -492,6 +525,7 @@ class PagedCache:
         self._block_of.clear()
         self._hash_of.clear()
         self._home_of.clear()
+        self._pending_moves.clear()
         for slot in range(self.max_seqs):
             self._chain[slot] = []
         self.check()                         # recovery must converge
@@ -515,6 +549,9 @@ class PagedCache:
             assert self._hash_of[b] == h
             assert b in self.allocator._ref or b in self.allocator._cached
             assert 0 <= self._home_of[b] < self.data_shards
+        for b, src, dst in self._pending_moves:
+            assert 0 <= src < self.data_shards and \
+                0 <= dst < self.data_shards and src != dst, (b, src, dst)
         for b in self.allocator._cached:
             assert b in self._hash_of
         # committed chains never outrun ownership, and a block this slot

@@ -306,7 +306,8 @@ class FCFSScheduler:
 
     def plan_step(self, chunk_size: int = 0, prefill_budget: int = 0,
                   spec_k: int = 0, spec_ema: float = 0.0,
-                  allow_admission: bool = True) -> StepPlan:
+                  allow_admission: bool = True,
+                  prefill_only: bool = False) -> StepPlan:
         """One scheduling round.  Returns the step plan; ``chunk_size <= 1``
         reproduces the legacy all-through-decode behavior exactly.
 
@@ -325,7 +326,16 @@ class FCFSScheduler:
         its acceptance-rate EMA, so a consistently-rejected draft decays
         to a single candidate while a well-matched one keeps the full K.
         The device shapes stay (B, spec_k) — dynamic K narrows ``ncand``
-        and the pool reservation, never the compiled step."""
+        and the pool reservation, never the compiled step.
+
+        ``prefill_only`` (disaggregated serving, DESIGN.md §16): plan no
+        decode work — decode-phase slots are parked for the cluster to
+        migrate to a decode replica, and speculation is skipped.  The
+        sampled prefill of a prompt's final chunk still happens (it is
+        part of the prefill dispatch), so the first token is produced
+        here; with ``chunk_size <= 1`` prefill advances token-by-token
+        through the decode path, so that path plans prefill-phase slots
+        only."""
         self.retire_finished()
         preempted = self.grow_or_preempt()
         # drain mode (DESIGN.md §14): finish what's running, leave the
@@ -333,13 +343,19 @@ class FCFSScheduler:
         admitted = self.admit() if allow_admission else []
         copies, self._copies = self._copies, []
         if chunk_size <= 1 and spec_k <= 0:
-            return StepPlan(decode=list(self.running), prefill=[],
+            rows = [s for s in self.running if s.phase == "prefill"] \
+                if prefill_only else list(self.running)
+            return StepPlan(decode=rows, prefill=[],
                             copies=copies, admitted=admitted,
                             preempted=preempted)
         # with chunking off, prefill-phase slots still advance through the
         # decode path token by token (the legacy contract)
-        decode = list(self.running) if chunk_size <= 1 else \
-            [s for s in self.running if s.phase == "decode"]
+        if prefill_only:
+            decode = [] if chunk_size > 1 else \
+                [s for s in self.running if s.phase == "prefill"]
+        else:
+            decode = list(self.running) if chunk_size <= 1 else \
+                [s for s in self.running if s.phase == "decode"]
         prefill: list[tuple[RequestState, int]] = []
         budget = prefill_budget if prefill_budget > 0 else float("inf")
         if chunk_size > 1:
@@ -354,7 +370,7 @@ class FCFSScheduler:
                 prefill.append((s, n))
                 budget -= n
         spec: list[RequestState] = []
-        if spec_k > 0:
+        if spec_k > 0 and not prefill_only:
             for s in sorted(decode, key=lambda r: r.req.rid):
                 want = s.req.max_new_tokens - len(s.generated)
                 k_s = spec_k if spec_ema <= 0 else \

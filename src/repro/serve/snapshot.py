@@ -102,6 +102,8 @@ def capture(engine) -> dict:
             "chain": [list(c) for c in cache._chain],
             "prefix_lookups": cache.prefix_lookups,
             "prefix_hits": cache.prefix_hits,
+            "alias_refusals": cache.alias_refusals,
+            "pending_moves": list(cache._pending_moves),
             "admission_paused": cache.admission_paused,
         },
     }
@@ -226,6 +228,8 @@ def restore_into(engine, snap: dict) -> None:
     cache._chain = [list(c) for c in ca["chain"]]
     cache.prefix_lookups = ca["prefix_lookups"]
     cache.prefix_hits = ca["prefix_hits"]
+    cache.alias_refusals = ca.get("alias_refusals", 0)
+    cache._pending_moves = [tuple(m) for m in ca.get("pending_moves", [])]
     cache.admission_paused = ca["admission_paused"]
 
     engine._rid = host["rid"]

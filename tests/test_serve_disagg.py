@@ -1,0 +1,317 @@
+"""Disaggregated prefill/decode serving (DESIGN.md §16).
+
+The contract under test: a cluster split into prefill-role and
+decode-role replicas serves every request **byte-identical** to a
+single mixed engine.  A prefill replica plans prefill chunks only;
+once a sequence's final chunk completes it parks at decode phase and
+the cluster migrates its KV(+scale) blocks and prefix chain to the
+least-loaded decode-capable replica over the ``export_slot`` /
+``import_slot`` transport.  When the decode pool has headroom the
+handoff is zero-recompute; when it does not, the adopter falls back to
+waiting-with-recompute — either way the token stream cannot change.
+
+Also covered here: the stage-(a) intra-mesh block-migration primitive
+that makes cross-shard prefix aliases legal in DP mode (the in-process
+2-shard variant; tests/test_serve_sharded.py holds the forced-4-device
+subprocess acceptance run), and the ``serve/alias_refusals`` counter
+on the refusal path it replaces.
+
+``CHAOS_SEED_OFFSET`` (CI disagg lane matrix) shifts injector seeds,
+mirroring tests/test_serve_cluster.py.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build
+from repro.obs import Telemetry
+from repro.serve import (Cluster, ClusterConfig, Engine, Fault,
+                         FaultInjector, ServeConfig)
+
+rng = np.random.default_rng(41)
+SEED = int(os.environ.get("CHAOS_SEED_OFFSET", "0"))
+
+
+@pytest.fixture(scope="module")
+def mp(key):
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    m = build(cfg)
+    return m, m.init(key)
+
+
+def _prompts(cfg, n=6, base=10):
+    return [[int(t) for t in rng.integers(0, cfg.vocab_size,
+                                          base - (i % 4))]
+            for i in range(n)]
+
+
+def _cfg(**kw):
+    kw.setdefault("max_seqs", 3)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("num_blocks", 48)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("chunk_size", 8)
+    kw.setdefault("audit_level", "full")
+    return ServeConfig(**kw)
+
+
+def _reference(mp, prompts, gen=8, **cfg_kw):
+    """Single mixed-engine oracle: {submission index: tokens}."""
+    m, params = mp
+    eng = Engine(m, params, _cfg(**cfg_kw))
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=gen)
+    out, _ = eng.run()
+    return {i: tuple(out[i].tokens) for i in sorted(out)}
+
+
+def _drive(cluster, rids, max_ticks=500):
+    res, stats = cluster.run(max_ticks=max_ticks)
+    assert not cluster.has_work, "cluster deadlocked"
+    cluster.check()
+    for r in cluster.replicas:
+        if r.state == "alive":
+            a = r.engine.cache_host.allocator
+            assert a.num_live == 0, f"{r.name}: leaked live blocks"
+            assert a.num_held == 0, f"{r.name}: leaked held blocks"
+    return {rids.index(rid): (tuple(rec.tokens), rec.finish_reason)
+            for rid, rec in res.items()}, stats
+
+
+def _disagg(mp, decode_cfg=None, prefill_cfg=None, **cluster_kw):
+    """1 prefill + 1 decode replica; returns (cluster, e_pre, e_dec)."""
+    m, params = mp
+    e_pre = Engine(m, params, prefill_cfg or _cfg(role="prefill"))
+    e_dec = Engine(m, params, decode_cfg or _cfg(role="decode"))
+    cl = Cluster([e_pre, e_dec], **cluster_kw)
+    return cl, e_pre, e_dec
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: disaggregated == single engine, byte for byte
+# ---------------------------------------------------------------------------
+
+def test_disagg_byte_identical_to_single_engine(mp):
+    """1 prefill + 1 decode replica over a mixed-length request set:
+    every request completes byte-identical to the single-engine oracle,
+    every sequence migrated exactly once, and the routing maps retire
+    with the requests (the _alias bound satellite)."""
+    m, _ = mp
+    prompts = _prompts(m.cfg)
+    ref = _reference(mp, prompts)
+
+    cl, e_pre, e_dec = _disagg(mp)
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    # role-aware routing: new prompts all land on the prefill replica
+    assert len(e_pre.scheduler.waiting) == len(prompts)
+    assert not e_dec.scheduler.waiting
+    got, stats = _drive(cl, rids)
+    assert {i: v for i, (v, _) in got.items()} == ref
+    assert all(reason == "length" for _, reason in got.values())
+    assert stats["disagg_migrations"] == len(prompts)
+    assert stats["failovers"] == 0
+    # prefill replica did prefill only: at most the sampled-prefill
+    # token per request, never a steady-state decode stream
+    assert e_pre._c["prefill_tokens"].value > 0
+    assert e_pre._c["decode_tokens"].value <= len(prompts)
+    assert e_dec._c["decode_tokens"].value > 0
+    # retired requests must not leave alias/retry entries behind
+    assert not cl._alias and not cl._retries
+
+
+def test_disagg_zero_recompute_with_headroom(mp):
+    """When the decode pool has slots for every migrated sequence, the
+    block handoff is byte-exact and zero-recompute: the decode replica
+    never prefills a single token."""
+    m, _ = mp
+    prompts = _prompts(m.cfg, n=3, base=12)
+    ref = _reference(mp, prompts, gen=10)
+
+    cl, e_pre, e_dec = _disagg(mp)
+    rids = [cl.submit(p, max_new_tokens=10) for p in prompts]
+    got, stats = _drive(cl, rids)
+    assert {i: v for i, (v, _) in got.items()} == ref
+    assert stats["disagg_migrations"] == len(prompts)
+    assert stats["migrated_blocks"] > 0
+    assert e_dec._c["prefill_tokens"].value == 0, \
+        "headroom present: migration must not recompute"
+
+
+def test_disagg_headroom_fallback_recomputes(mp):
+    """More in-flight sequences than the decode pool holds: the
+    overflow falls back to waiting-with-recompute on the decode replica
+    (documented §16 fallback) and outputs still cannot change."""
+    m, _ = mp
+    prompts = _prompts(m.cfg, n=6, base=11)
+    ref = _reference(mp, prompts)
+
+    cl, e_pre, e_dec = _disagg(
+        mp, decode_cfg=_cfg(role="decode", max_seqs=2, num_blocks=24))
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    got, stats = _drive(cl, rids)
+    assert {i: v for i, (v, _) in got.items()} == ref
+    assert stats["disagg_migrations"] == len(prompts)
+    assert e_dec._c["prefill_tokens"].value > 0, \
+        "expected the recompute fallback to engage"
+    assert all(reason == "length" for _, reason in got.values())
+
+
+def test_disagg_migration_latency_observed(mp):
+    """The migration-latency histogram records one handoff per
+    sequence, and the per-role trace tracks carry the role suffix."""
+    m, _ = mp
+    prompts = _prompts(m.cfg, n=3)
+    tel = Telemetry(enabled=True)
+    cl, _, _ = _disagg(mp, telemetry=tel)
+    rids = [cl.submit(p, max_new_tokens=6) for p in prompts]
+    _drive(cl, rids)
+    hist = tel.registry.histograms["migrate/handoff_s"]
+    assert hist.count == len(prompts)
+    names = set(tel.trace._track_names.values())
+    assert any(":prefill" in n for n in names)
+    assert any(":decode" in n for n in names)
+
+
+# ---------------------------------------------------------------------------
+# Role constraints and routing
+# ---------------------------------------------------------------------------
+
+def test_prefill_only_cluster_rejected(mp):
+    """A cluster whose every replica is prefill-role can never finish a
+    request — constructing one is a config error."""
+    m, params = mp
+    with pytest.raises(ValueError, match="decode-capable"):
+        Cluster([Engine(m, params, _cfg(role="prefill"))])
+
+
+def test_bad_role_rejected(mp):
+    m, params = mp
+    with pytest.raises(ValueError, match="role"):
+        Engine(m, params, _cfg(role="verifier"))
+
+
+def test_decode_replica_takes_prompts_when_alone(mp):
+    """Availability beats the role split: with every prefill-capable
+    replica dead, new prompts route to the decode replica, whose engine
+    plans normally."""
+    m, _ = mp
+    prompts = _prompts(m.cfg, n=3)
+    ref = _reference(mp, prompts)
+    cl, e_pre, e_dec = _disagg(mp)
+    cl.kill(0)                            # prefill replica down
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    assert len(e_dec.scheduler.waiting) == len(prompts)
+    got, stats = _drive(cl, rids)
+    assert {i: v for i, (v, _) in got.items()} == ref
+    assert stats["disagg_migrations"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Failure domains per role (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def test_prefill_replica_death_rehomes_to_decode(mp):
+    """The prefill replica dies mid-prefill: its half-prefilled running
+    set and backlog re-home onto the decode replica through ordinary
+    failover, byte-identically."""
+    m, _ = mp
+    prompts = _prompts(m.cfg)
+    ref = _reference(mp, prompts)
+
+    fi = FaultInjector([Fault("replica_kill", step=2, rid=0)], seed=SEED)
+    cl, _, e_dec = _disagg(mp, faults=fi)
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    got, stats = _drive(cl, rids)
+    assert fi.fired["replica_kill"] == 1
+    assert stats["failovers"] == 1 and stats["alive"] == 1
+    assert {i: v for i, (v, _) in got.items()} == ref
+    assert all(reason == "length" for _, reason in got.values())
+
+
+def test_decode_replica_death_fails_parked_requests_cleanly(mp):
+    """The decode replica dies and only the prefill replica survives:
+    parked sequences have no decode-capable target, so they fail with
+    finish_reason "error" instead of wedging the cluster; nothing
+    leaks, and the retry map retires with them."""
+    m, _ = mp
+    prompts = _prompts(m.cfg, n=3)
+    fi = FaultInjector([Fault("replica_kill", step=4, rid=1)], seed=SEED)
+    cl, e_pre, _ = _disagg(mp, faults=fi)
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    got, stats = _drive(cl, rids)
+    assert fi.fired["replica_kill"] == 1
+    assert len(got) == len(prompts), "every request must get a result"
+    assert all(reason == "error" for _, reason in got.values())
+    assert not cl._alias and not cl._retries
+
+
+def test_prefill_replica_restart_live_migrates(mp):
+    """restart() on a prefill replica cannot drain (parked sequences
+    never finish there): it live-migrates running + backlog instead,
+    with zero failed requests and byte-identical outputs."""
+    m, _ = mp
+    prompts = _prompts(m.cfg)
+    ref = _reference(mp, prompts)
+
+    cl, e_pre, _ = _disagg(mp, cfg=ClusterConfig(drain_timeout_s=30.0))
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    for _ in range(2):
+        cl.step()
+    cl.restart(0)
+    assert cl.replicas[0].state == "alive"
+    got, stats = _drive(cl, rids)
+    assert stats["failovers"] == 0
+    assert {i: v for i, (v, _) in got.items()} == ref
+    assert all(reason == "length" for _, reason in got.values())
+
+
+def test_rolling_restart_role_cluster(mp):
+    """rolling_restart across a prefill+decode+mixed cluster: zero
+    failed requests, byte parity."""
+    m, params = mp
+    prompts = _prompts(m.cfg)
+    ref = _reference(mp, prompts)
+
+    cl = Cluster([Engine(m, params, _cfg(role="prefill")),
+                  Engine(m, params, _cfg(role="decode")),
+                  Engine(m, params, _cfg())])
+    rids = [cl.submit(p, max_new_tokens=8) for p in prompts]
+    for _ in range(3):
+        cl.step()
+    cl.rolling_restart()
+    assert all(r.state == "alive" for r in cl.replicas)
+    got, stats = _drive(cl, rids)
+    assert stats["failovers"] == 0
+    assert {i: v for i, (v, _) in got.items()} == ref
+    assert all(reason in ("length", "stop") for _, reason in got.values())
+
+
+# ---------------------------------------------------------------------------
+# Prefill-role engine semantics
+# ---------------------------------------------------------------------------
+
+def test_prefill_role_engine_plans_no_decode(mp):
+    """Standalone prefill-role engine: sequences park at decode phase
+    (never finish) and the scheduler plans zero steady-state decode
+    rows — run() would deadlock, so step until quiescent."""
+    m, params = mp
+    eng = Engine(m, params, _cfg(role="prefill"))
+    prompts = _prompts(m.cfg, n=2)
+    for p in prompts:
+        eng.add_request(p, max_new_tokens=8)
+    for _ in range(30):
+        if not eng.scheduler.has_work:
+            break
+        before = eng._steps
+        eng.step()
+        if eng._steps == before:        # planned nothing: parked
+            break
+    parked = [s for s in eng.scheduler.running if s.phase == "decode"]
+    assert len(parked) == len(prompts), "sequences must park, not finish"
+    assert not eng.scheduler.finished
+    assert eng.decode_ready() == [s.req.rid for s in parked]
+    # each sequence emitted at most its sampled-prefill first token
+    assert all(len(s.generated) <= 1 for s in parked)
+    eng.cache_host.check()

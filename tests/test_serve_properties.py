@@ -4,7 +4,12 @@ DepGraph-style lesson (arXiv:2301.12900): coupled-state invariants are
 where silent corruption hides.  Here the coupled state is block ownership:
 the allocator's refcounts, the per-slot block tables, the prefix index and
 the scheduler's admit/grow/preempt/release transitions must stay mutually
-consistent under *any* interleaving.  Two drivers exercise them:
+consistent under *any* interleaving.  Four drivers exercise them (the
+third is the real engine under recoverable fault schedules; the fourth
+migrates sequences between two real engines over the
+``export_slot``/``import_slot`` transport — strategy-chosen handoff
+times against alloc-hold and sync-error faults, with a conservation
+oracle spanning both engines).  The first two:
 
   1. a raw ``BlockAllocator`` state machine (random
      alloc/incref/decref/free against a pure-python mirror — conservation,
@@ -315,6 +320,84 @@ def _drive_engine(eng, prompts, faults=None, gen=6):
 
 
 # ---------------------------------------------------------------------------
+# Driver 4: two-engine block migration under strategy-chosen faults
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_pair(key):
+    """Two identical reduced engines plus the cached fault-free
+    single-engine reference — the export_slot/import_slot migration
+    transport must be invisible at the token level no matter when the
+    handoff lands or what faults surround it."""
+    import numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import build
+    from repro.serve import Engine, ServeConfig
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    m = build(cfg)
+    params = m.init(key)
+    sc = ServeConfig(max_seqs=3, block_size=4, num_blocks=24, max_len=48,
+                     chunk_size=8, audit_level="full")
+    e1, e2 = Engine(m, params, sc), Engine(m, params, sc)
+    prng = np.random.default_rng(59)
+    prompts = [[int(t) for t in prng.integers(0, cfg.vocab_size,
+                                              10 - (i % 3))]
+               for i in range(4)]
+    return e1, e2, prompts, _drive_engine(e1, prompts)
+
+
+def _drive_migration(e1, e2, prompts, migrate_at, faults1=None,
+                     faults2=None, gen=6):
+    """Drive two engines with decode-phase requests migrating e1 -> e2
+    at the given steps (the cluster's disaggregation handoff, §16).
+    The conservation oracle spans both engines: each allocator balances
+    every round, and at the end every submitted request has finished on
+    exactly one engine — migration can neither lose nor duplicate a
+    sequence.  Returns ({submission index: (tokens, reason)}, #migrated)."""
+    e1.reset()
+    e2.reset()
+    e2._rid = 1 << 20              # disjoint rid namespaces (cluster-style)
+    e1.faults, e2.faults = faults1, faults2
+    idx = {}                       # rid (either engine) -> submission index
+    for i, p in enumerate(prompts):
+        idx[e1.add_request(p, max_new_tokens=gen)] = i
+    totals = {e: e.cache_host.allocator.num_free for e in (e1, e2)}
+    migrate_at = set(migrate_at)
+    migrated = 0
+    n = 0
+    while any(e.scheduler.has_work or e.pending_step for e in (e1, e2)):
+        if n in migrate_at:
+            for s in list(e1.scheduler.running):
+                if s.phase == "decode" and not s.done:
+                    rid = s.req.rid
+                    h = e1.export_request(rid, remove=True)
+                    idx[e2.adopt(h)] = idx.pop(rid)
+                    migrated += 1
+        for e in (e1, e2):
+            if e.scheduler.has_work or e.pending_step:
+                e.step()
+        for e in (e1, e2):
+            e.cache_host.check()
+            a = e.cache_host.allocator
+            assert a.num_free + a.num_live + a.num_cached \
+                + a.num_held == totals[e], "cross-engine conservation"
+        n += 1
+        assert n <= 500, "no progress under migration schedule"
+    e1.faults = e2.faults = None
+    out = {}
+    for e in (e1, e2):
+        a = e.cache_host.allocator
+        assert a.num_live == 0 and a.num_held == 0
+        e.cache_host.check()
+        for rid, rec in e.pop_finished().items():
+            i = idx.pop(rid)
+            assert i not in out, "request finished on both engines"
+            out[i] = (tuple(rec.tokens), rec.finish_reason)
+    assert not idx, "requests lost in migration"
+    return out, migrated
+
+
+# ---------------------------------------------------------------------------
 # hypothesis variants (preferred when available)
 # ---------------------------------------------------------------------------
 
@@ -366,6 +449,22 @@ if HAVE_HYPOTHESIS:
         fi = FaultInjector(schedule, seed=0)
         assert _drive_engine(eng, prompts, faults=fi) == ref
 
+    # -- two-engine migration: hypothesis chooses WHEN sequences hand
+    # off (including mid-alloc-hold and around sync errors on either
+    # side) and the whole run must stay byte-identical to the cached
+    # fault-free single-engine reference
+    @given(st.lists(st.integers(0, 30), min_size=1, max_size=3),
+           _recoverable_schedules(), _recoverable_schedules())
+    @settings(max_examples=max(_MAX_EX // 8, 3), deadline=None)
+    def test_migration_byte_identical_under_fault_schedule(
+            engine_pair, migrate_at, sched1, sched2):
+        e1, e2, prompts, ref = engine_pair
+        out, _ = _drive_migration(
+            e1, e2, prompts, migrate_at,
+            faults1=FaultInjector(sched1, seed=0),
+            faults2=FaultInjector(sched2, seed=1))
+        assert out == ref
+
 
 # ---------------------------------------------------------------------------
 # seeded fallback (always runs; hypothesis is an optional dependency)
@@ -400,6 +499,23 @@ def test_engine_fixed_fault_schedule_byte_identical(engine_ref):
                        seed=0)
     assert _drive_engine(eng, prompts, faults=fi) == ref
     assert sum(fi.fired.values()) >= 2
+
+
+def test_migration_fixed_fault_schedule_byte_identical(engine_pair):
+    """Seeded fallback for the two-engine migration property: handoffs
+    land mid-alloc-hold on the adopter and bracket a sync error on the
+    exporter, and the run stays byte-identical with every sequence
+    accounted for exactly once."""
+    eng1, eng2, prompts, ref = engine_pair
+    fi1 = FaultInjector([Fault("sync_error", step=4)], seed=0)
+    fi2 = FaultInjector([Fault("alloc_hold", step=1, blocks=12,
+                               hold_steps=3),
+                         Fault("sync_error", step=5)], seed=1)
+    out, migrated = _drive_migration(eng1, eng2, prompts,
+                                     migrate_at=(2, 4, 7),
+                                     faults1=fi1, faults2=fi2)
+    assert out == ref
+    assert migrated > 0, "schedule never exercised a migration"
 
 
 def test_cached_blocks_are_reclaimed_lru_first():

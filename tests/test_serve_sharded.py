@@ -274,32 +274,95 @@ def test_shard_local_prefix_index():
     cache.check()
 
 
-def test_dp_cross_shard_prefix_hit_recomputes(key):
+def _staged_cross_shard(m, params, mesh, migrate=True):
     """Staggered admission forcing a cross-shard prefix hit: request A
     registers a prefix on shard 0, a filler then occupies shard 0, and
-    request B (same prefix) lands on shard 1.  Under per-replica pools B
-    must NOT alias shard-0 blocks (its replica never wrote them) — the
-    home-shard guard makes it re-prefill, and outputs must match the
-    1-device oracle byte for byte.  Regression: the guard was dead
-    because PagedCache never learned data_shards."""
-    if len(jax.devices()) < 2:
-        pytest.skip("needs 2 devices")
-    m, params = _models(key, False)
+    request B (same prefix) lands on shard 1.  Returns A's tokens, B's
+    tokens and the engine for counter inspection."""
     rng = np.random.default_rng(17)
     common = [int(t) for t in rng.integers(0, m.cfg.vocab_size, 12)]
     pa = common + [1, 2]
     pb = common + [3, 4]
     filler = [int(t) for t in rng.integers(0, m.cfg.vocab_size, 6)]
+    eng = Engine(m, params, ServeConfig(
+        max_seqs=2, block_size=4, max_len=48, chunk_size=8,
+        migrate_on_alias=migrate), mesh=mesh)
+    ra = eng.add_request(pa, max_new_tokens=6)
+    while eng.scheduler.has_work:               # A runs alone on slot 0
+        eng.step()
+    eng.add_request(filler, max_new_tokens=16)
+    eng.step()                                  # filler takes slot 0
+    rb = eng.add_request(pb, max_new_tokens=6)
+    while eng.scheduler.has_work:
+        eng.step()
+        eng.cache_host.check()
+    done = {s.req.rid: list(s.generated) for s in eng.scheduler.finished}
+    return done[ra], done[rb], eng
+
+
+def test_dp_cross_shard_prefix_hit_migrates(key):
+    """Cross-shard prefix hits in DP mode alias via block migration
+    (ROADMAP item 2 stage (a)): request B's replica re-homes A's prefix
+    blocks with an intra-mesh copy instead of re-prefilling.  Outputs
+    must match the 1-device oracle byte for byte, ``shard_moves``
+    proves the copy happened, and the migrated path spends fewer
+    prefill tokens than the legacy refusal path."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 devices")
+    m, params = _models(key, False)
+    ref_a, ref_b, _ = _staged_cross_shard(m, params, None)
+    out_a, out_b, eng = _staged_cross_shard(m, params,
+                                            make_serve_mesh(2, 1))
+    assert eng.shard_mode == "dp"
+    assert out_a == ref_a
+    assert out_b == ref_b
+    assert eng._c["shard_moves"].value > 0, "expected a block migration"
+    assert eng.cache_host.alias_refusals == 0
+
+
+def test_dp_cross_shard_refusal_counter_without_migration(key):
+    """migrate_on_alias=False keeps the PR-4 behavior: the cross-shard
+    hit is refused (counted in ``serve/alias_refusals``), B re-prefills
+    its prefix, and outputs still match the oracle."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 devices")
+    m, params = _models(key, False)
+    ref_a, ref_b, _ = _staged_cross_shard(m, params, None)
+    out_a, out_b, eng = _staged_cross_shard(
+        m, params, make_serve_mesh(2, 1), migrate=False)
+    assert eng.shard_mode == "dp"
+    assert out_a == ref_a
+    assert out_b == ref_b
+    assert eng._c["shard_moves"].value == 0
+    assert eng.cache_host.alias_refusals > 0
+    assert eng._c["alias_refusals"].value > 0   # synced into run counters
+
+
+def test_dp_cross_shard_migration_four_shards(key):
+    """Stage-(a) acceptance on a real 4-shard data-parallel mesh:
+    request A homes a prefix on shard 0, three fillers occupy shards
+    0-2, request B lands on shard 3 and aliases A's blocks via
+    migration — byte-identical to the 1-device oracle."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 devices")
+    m, params = _models(key, False)
+    rng = np.random.default_rng(23)
+    common = [int(t) for t in rng.integers(0, m.cfg.vocab_size, 12)]
+    pa = common + [1, 2]
+    pb = common + [3, 4]
+    fillers = [[int(t) for t in rng.integers(0, m.cfg.vocab_size, 6)]
+               for _ in range(3)]
 
     def staged(mesh):
         eng = Engine(m, params, ServeConfig(
-            max_seqs=2, block_size=4, max_len=48, chunk_size=8),
+            max_seqs=4, block_size=4, max_len=48, chunk_size=8),
             mesh=mesh)
         ra = eng.add_request(pa, max_new_tokens=6)
-        while eng.scheduler.has_work:           # A runs alone on slot 0
+        while eng.scheduler.has_work:           # A runs alone on shard 0
             eng.step()
-        rf = eng.add_request(filler, max_new_tokens=16)
-        eng.step()                              # filler takes slot 0
+        for f in fillers:                       # occupy shards 0..2
+            eng.add_request(f, max_new_tokens=16)
+        eng.step()
         rb = eng.add_request(pb, max_new_tokens=6)
         while eng.scheduler.has_work:
             eng.step()
@@ -309,10 +372,13 @@ def test_dp_cross_shard_prefix_hit_recomputes(key):
         return done[ra], done[rb], eng
 
     ref_a, ref_b, _ = staged(None)
-    out_a, out_b, eng = staged(make_serve_mesh(2, 1))
+    out_a, out_b, eng = staged(make_serve_mesh(4, 1))
     assert eng.shard_mode == "dp"
+    assert eng.scheduler.data_shards == 4
     assert out_a == ref_a
     assert out_b == ref_b
+    assert eng._c["shard_moves"].value > 0
+    assert eng.cache_host.alias_refusals == 0
 
 
 @pytest.mark.parametrize("dm", [(3, 1)])
@@ -344,5 +410,23 @@ def test_multi_device_parity_subprocess():
         [sys.executable, "-m", "pytest", "-x", "-q",
          os.path.join(repo, "tests", "test_serve_sharded.py"),
          "-k", "decode_matches and dense"],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-2000:]
+
+
+def test_cross_shard_migration_subprocess():
+    """Stage-(a) acceptance from a single-device session: the cross-
+    shard alias-migration tests (2-shard pair + the 4-shard variant) on
+    forced host-platform devices."""
+    if len(jax.devices()) >= 4:
+        pytest.skip("session already multi-device; in-process tests cover")
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         os.path.join(repo, "tests", "test_serve_sharded.py"),
+         "-k", "cross_shard"],
         capture_output=True, text=True, env=env, timeout=900)
     assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-2000:]
